@@ -1,0 +1,41 @@
+"""Shared benchmark fixtures: a CPU-sized synthetic ClueWeb stand-in."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anchors, invindex, scoring
+from repro.data import synthetic
+
+VOCAB = 8192
+N_DOCS = 8192
+MAX_LEN = 64
+
+
+def make_collection(seed: int = 0):
+    corpus = synthetic.make_corpus(
+        n_docs=N_DOCS, vocab=VOCAB, max_len=MAX_LEN, seed=seed
+    )
+    stats = anchors.collection_stats(
+        jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths), vocab=VOCAB,
+        chunk_size=512,
+    )
+    stats = jax.tree.map(lambda x: jax.device_get(x), stats)
+    index = invindex.build_index(corpus.tokens, corpus.lengths, vocab=VOCAB)
+    return corpus, stats, index
+
+
+def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))

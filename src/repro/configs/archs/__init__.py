@@ -1,0 +1,27 @@
+from repro.configs.archs import (
+    dbrx_132b,
+    dcn_v2,
+    fm,
+    gemma2_27b,
+    gemma2_2b,
+    h2o_danube_1_8b,
+    mind,
+    mirex,
+    pna,
+    qwen3_moe_30b_a3b,
+    sasrec,
+)
+
+__all__ = [
+    "dbrx_132b",
+    "dcn_v2",
+    "fm",
+    "gemma2_27b",
+    "gemma2_2b",
+    "h2o_danube_1_8b",
+    "mind",
+    "mirex",
+    "pna",
+    "qwen3_moe_30b_a3b",
+    "sasrec",
+]

@@ -1,0 +1,18 @@
+"""MIREX core: sequential-scan retrieval as a MapReduce-shaped JAX dataflow."""
+
+from repro.core import anchors, invindex, pipeline, scan, scoring, topk
+from repro.core.scoring import CollectionStats, Scorer, get_scorer
+from repro.core.topk import TopKState
+
+__all__ = [
+    "anchors",
+    "invindex",
+    "pipeline",
+    "scan",
+    "scoring",
+    "topk",
+    "CollectionStats",
+    "Scorer",
+    "get_scorer",
+    "TopKState",
+]

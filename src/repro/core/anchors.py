@@ -1,0 +1,114 @@
+"""Corpus-preparation MapReduce jobs: collection statistics + anchor text.
+
+The paper runs two jobs before searching: (1) collection statistics that feed
+the LM scorer (term/document frequencies), and (2) anchor-text extraction,
+which groups the link anchor strings pointing *at* each page into that page's
+searchable representation (§3.2: 11 h on 15 machines; the representation the
+TREC runs searched). Both are pure map+combine jobs with additive combiner
+states, so they ride :func:`repro.core.pipeline.fold_chunks` /
+``merge_across(psum)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline
+from repro.core.scoring import PAD_TOKEN, CollectionStats
+
+
+def _chunk_stats(chunk_tokens: jax.Array, vocab: int):
+    """Per-chunk (cf, df, total, n_docs) from raw padded token rows."""
+    valid = chunk_tokens != PAD_TOKEN
+    safe = jnp.where(valid, chunk_tokens, 0)
+    cf = jnp.zeros((vocab,), jnp.int32).at[safe].add(valid.astype(jnp.int32))
+    # df: count each term at most once per document via sort + first-occurrence.
+    sorted_toks = jnp.sort(safe * valid + (1 - valid) * (vocab + 1), axis=-1)
+    first = jnp.concatenate(
+        [
+            jnp.ones_like(sorted_toks[:, :1], bool),
+            sorted_toks[:, 1:] != sorted_toks[:, :-1],
+        ],
+        axis=-1,
+    ) & (sorted_toks <= vocab)
+    df = (
+        jnp.zeros((vocab + 2,), jnp.int32)
+        .at[jnp.where(first, sorted_toks, vocab + 1)]
+        .add(first.astype(jnp.int32))[:vocab]
+    )
+    # int32 accumulator: fine below 2^31 terms; real deployments enable x64.
+    total = valid.sum().astype(jnp.int32)
+    return cf, df, total
+
+
+def collection_stats(
+    d_tokens: jax.Array,
+    d_len: jax.Array,
+    vocab: int,
+    *,
+    chunk_size: int = 256,
+    axis_name=None,
+) -> CollectionStats:
+    """The statistics job. Additive combiner -> psum merge across shards."""
+    n = d_tokens.shape[0]
+    state0 = (
+        jnp.zeros((vocab,), jnp.int32),
+        jnp.zeros((vocab,), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+    )
+
+    def fold(state, chunk, start):
+        del start
+        tokens, lens = chunk
+        cf, df, total = _chunk_stats(tokens, vocab)
+        n_docs = (lens > 0).sum().astype(jnp.int32)
+        return (state[0] + cf, state[1] + df, state[2] + total, state[3] + n_docs)
+
+    cf, df, total, n_docs = pipeline.fold_chunks((d_tokens, d_len), chunk_size, fold, state0)
+    if axis_name is not None:
+        cf, df, total, n_docs = pipeline.merge_across((cf, df, total, n_docs), axis_name)
+    avg = total.astype(jnp.float32) / jnp.maximum(n_docs.astype(jnp.float32), 1.0)
+    return CollectionStats(
+        cf=cf, df=df, total_terms=total, n_docs=n_docs, avg_doc_len=avg
+    )
+
+
+def extract_anchors(
+    link_dst: jax.Array,
+    link_tokens: jax.Array,
+    *,
+    n_docs: int,
+    max_anchor_len: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Anchor-text extraction: group anchor strings by destination page.
+
+    ``link_dst [E]`` destination doc ids, ``link_tokens [E, L_a]`` anchor
+    token ids (PAD_TOKEN-padded). Returns the anchor-text document
+    representation ``(tokens [n_docs, max_anchor_len], lens [n_docs])``: for
+    each page, the concatenation of anchors pointing at it, truncated. This is
+    the map (emit (dst, anchor)) + shuffle (group by dst) + reduce (concat) of
+    the paper's first job, realized as sort + rank-within-group + scatter.
+    """
+    e, l_a = link_tokens.shape
+    order = jnp.argsort(link_dst, stable=True)
+    dst_sorted = link_dst[order]
+    toks_sorted = link_tokens[order]
+    # rank of each link within its destination group
+    group_start = jnp.searchsorted(dst_sorted, dst_sorted, side="left")
+    rank = jnp.arange(e, dtype=jnp.int32) - group_start.astype(jnp.int32)
+    # each anchor token's target column in the output row
+    n_valid = (toks_sorted != PAD_TOKEN).sum(-1)
+    col_base = rank * l_a  # dense packing assumes fixed anchor stride
+    cols = col_base[:, None] + jnp.arange(l_a, dtype=jnp.int32)[None, :]
+    keep = (toks_sorted != PAD_TOKEN) & (cols < max_anchor_len)
+    safe_cols = jnp.where(keep, cols, max_anchor_len)  # spill row for overflow
+    out = jnp.full((n_docs, max_anchor_len + 1), PAD_TOKEN, link_tokens.dtype)
+    out = out.at[dst_sorted[:, None], safe_cols].set(
+        jnp.where(keep, toks_sorted, PAD_TOKEN), mode="drop"
+    )
+    out = out[:, :max_anchor_len]
+    lens = (out != PAD_TOKEN).sum(-1)
+    del n_valid
+    return out, lens

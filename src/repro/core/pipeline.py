@@ -1,0 +1,100 @@
+"""Generic MapReduce-shaped dataflow on JAX.
+
+The three-stage shape of the paper's Figure 1 — map over an input split, fold
+into an associative *combiner* state, merge states across machines — shows up
+all over this framework (document scan, collection statistics, anchor
+extraction, edge-sharded GNN aggregation, split-KV decode). This module is the
+shared skeleton:
+
+    state = fold_chunks(local_shard, chunk, fold_fn, init)   # map + combine
+    state = merge_across(state, axis_name, merge_fn)          # shuffle + reduce
+
+``fold_chunks`` is a ``lax.scan`` so the compiled HLO is one chunk's program
+regardless of corpus size; ``merge_across`` is a single collective whose
+payload is the (small, mergeable) combiner state — the paper's communication
+bound, enforced by construction. Chunk folds are *idempotent re-reduces*: the
+combiner state is associative/commutative, so a re-executed chunk (Hadoop-style
+failure re-execution, straggler work stealing) merges to the same result.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, TypeVar
+
+import jax
+import jax.numpy as jnp
+
+S = TypeVar("S")
+
+Pytree = Any
+
+
+def num_chunks(n: int, chunk_size: int) -> int:
+    return -(-n // chunk_size)
+
+
+def pad_leading(tree: Pytree, n_target: int, pad_values: Pytree | None = None) -> Pytree:
+    """Pad every leaf's leading dim to ``n_target`` (with leaf-specific fill)."""
+
+    def _pad(x, fill):
+        pad = n_target - x.shape[0]
+        if pad == 0:
+            return x
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    if pad_values is None:
+        return jax.tree.map(lambda x: _pad(x, 0), tree)
+    return jax.tree.map(_pad, tree, pad_values)
+
+
+def fold_chunks(
+    data: Pytree,
+    chunk_size: int,
+    fold_fn: Callable[[S, Pytree, jax.Array], S],
+    init_state: S,
+) -> S:
+    """Map+combine over a local shard, ``chunk_size`` rows at a time.
+
+    ``fold_fn(state, chunk, chunk_start) -> state``. The leading dim of every
+    leaf in ``data`` must be divisible by ``chunk_size`` (use
+    :func:`pad_leading`). ``chunk_start`` is the global row offset of the
+    chunk within the *local* shard, for id bookkeeping.
+    """
+    n = jax.tree.leaves(data)[0].shape[0]
+    if n % chunk_size:
+        raise ValueError(f"leading dim {n} not divisible by chunk_size {chunk_size}")
+    n_chunk = n // chunk_size
+    chunked = jax.tree.map(lambda x: x.reshape(n_chunk, chunk_size, *x.shape[1:]), data)
+    starts = jnp.arange(n_chunk, dtype=jnp.int32) * chunk_size
+
+    def body(state, xs):
+        chunk, start = xs
+        return fold_fn(state, chunk, start), None
+
+    state, _ = jax.lax.scan(body, init_state, (chunked, starts))
+    return state
+
+
+def merge_across(
+    state: S,
+    axis_name: str | tuple[str, ...],
+    merge_fn: Callable[[S, S], S] | None = None,
+) -> S:
+    """Reduce combiner states across a mesh axis (inside ``shard_map``).
+
+    With ``merge_fn=None`` the state is assumed additive and reduced with
+    ``psum`` (collection statistics, GNN partial aggregates). Otherwise each
+    shard's state is all-gathered and folded left with ``merge_fn`` (top-k
+    lists and other non-additive monoids).
+    """
+    if merge_fn is None:
+        return jax.lax.psum(state, axis_name)
+    n = jax.lax.psum(1, axis_name)
+    gathered = jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axis_name, axis=0, tiled=False), state
+    )
+    out = jax.tree.map(lambda x: x[0], gathered)
+    for i in range(1, n):
+        out = merge_fn(out, jax.tree.map(lambda x, i=i: x[i], gathered))
+    return out

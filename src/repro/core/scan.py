@@ -1,0 +1,130 @@
+"""The sequential-scan search engine — MIREX's map phase, blocked for the MXU.
+
+One pass over the (sharded) corpus scores *every* query against *every*
+document and maintains a running top-k per query. Per-query cost amortizes
+with query-set size (paper claim C1) because the corpus stream through
+HBM/VMEM is paid once for the whole query block.
+
+Layering:
+  * :func:`search_local`  — fold over one device's corpus shard (pure JAX).
+  * :func:`search_sharded` — shard_map over the mesh: local search + the
+    combiner-bounded top-k merge (`topk.merge_across`).
+  * dense-path hot loop optionally dispatches to the Pallas fused
+    score+top-k kernel (`repro.kernels.ops.score_topk`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import pipeline, topk
+from repro.core.scoring import CollectionStats, Scorer
+
+
+def search_local(
+    queries: Any,
+    docs: Any,
+    scorer: Scorer,
+    *,
+    k: int,
+    chunk_size: int,
+    stats: CollectionStats | None = None,
+    doc_id_offset: jax.Array | int = 0,
+    use_kernel: bool = False,
+) -> topk.TopKState:
+    """Scan a local corpus shard; return top-k (global doc ids) per query.
+
+    ``docs`` is ``(tokens [n, L], lens [n])`` for lexical scorers or a vector
+    matrix ``[n, dim]`` for dense scorers. ``n`` must be a multiple of
+    ``chunk_size``. ``doc_id_offset`` maps local row -> global doc id.
+    """
+    if scorer.kind == "dense" and use_kernel:
+        from repro.kernels import ops  # local import: kernels are optional
+
+        n_q = queries.shape[0]
+        scores, ids = ops.score_topk(queries, docs, k=k, block_d=chunk_size)
+        return topk.TopKState(scores=scores, ids=ids + jnp.int32(doc_id_offset))
+
+    n_q = jax.tree.leaves(queries)[0].shape[0]
+    state0 = topk.init(k, (n_q,))
+    offset = jnp.asarray(doc_id_offset, jnp.int32)
+
+    def fold(state, chunk, start):
+        scores = scorer.score_block(queries, chunk, stats)  # [n_q, chunk_size]
+        ids = offset + start + jnp.arange(scores.shape[-1], dtype=jnp.int32)
+        return topk.update(state, scores, jnp.broadcast_to(ids, scores.shape))
+
+    return pipeline.fold_chunks(docs, chunk_size, fold, state0)
+
+
+def search_sharded(
+    mesh: Mesh,
+    axis_names: tuple[str, ...],
+    queries: Any,
+    docs: Any,
+    scorer: Scorer,
+    *,
+    k: int,
+    chunk_size: int,
+    stats: CollectionStats | None = None,
+    use_kernel: bool = False,
+    tree_merge: bool = False,
+):
+    """Full MIREX job on a mesh: corpus sharded over ``axis_names``, queries
+    replicated, per-shard scan, then the k-bounded distributed merge.
+
+    Returns a jitted callable ``(queries, docs[, stats]) -> TopKState`` with
+    global doc ids, replicated on every device.
+    """
+    doc_spec = P(axis_names)  # shard leading (document) dim
+    docs_specs = jax.tree.map(lambda _: doc_spec, docs)
+    q_specs = jax.tree.map(lambda _: P(), queries)
+    stats_specs = None if stats is None else jax.tree.map(lambda _: P(), stats)
+
+    n_shards = 1
+    for a in axis_names:
+        n_shards *= mesh.shape[a]
+    n_docs_total = jax.tree.leaves(docs)[0].shape[0]
+    if n_docs_total % n_shards:
+        raise ValueError(f"{n_docs_total} docs not divisible by {n_shards} shards")
+    per_shard = n_docs_total // n_shards
+
+    def local_job(queries, docs, stats):
+        # global shard index = flattened index over the sharding axes
+        idx = 0
+        for a in axis_names:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        state = search_local(
+            queries,
+            docs,
+            scorer,
+            k=k,
+            chunk_size=chunk_size,
+            stats=stats,
+            doc_id_offset=idx * per_shard,
+            use_kernel=use_kernel,
+        )
+        if tree_merge and len(axis_names) == 1:
+            return topk.merge_across_tree(state, axis_names[0])
+        return topk.merge_across(state, axis_names)
+
+    sharded = shard_map(
+        local_job,
+        mesh=mesh,
+        in_specs=(q_specs, docs_specs, stats_specs),
+        out_specs=topk.TopKState(P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(functools.partial(sharded))
+
+
+def search_dense_host(q_vecs, d_vecs, k: int):
+    """Unblocked oracle (materializes the full score matrix) for tests."""
+    scores = q_vecs.astype(jnp.float32) @ d_vecs.astype(jnp.float32).T
+    return topk.topk_dense(scores, k)

@@ -1,0 +1,171 @@
+"""Pluggable scoring functions — the paper's ``experimental_score``.
+
+MIREX's whole point is that a *new retrieval approach is a new scoring
+function*, not a change to index machinery. The contract here is the TPU
+adaptation of that idea: a scorer is a **blocked** function
+
+    score_block(query_block, doc_block) -> scores [n_q, n_d]
+
+so that new approaches stay ~20 lines while the scan engine and kernels keep
+the MXU busy. Two families:
+
+* ``lexical`` — raw-token scan, exactly the paper's setting. Documents are
+  padded token-id arrays; term frequencies are recomputed on the fly from the
+  raw text every scan (no index!), which is the "radical new approaches can use
+  anything in the document" property the paper argues for.
+* ``dense``   — learned-representation scan (two-tower recsys, neural IR); the
+  block score is a plain matmul and the hot path of the Pallas kernel.
+
+The default lexical scorer is the paper's own: Hiemstra's query-likelihood
+language model with a document-length prior, eq. of [Hiemstra 2001]:
+
+    score(q, d) = log |d| + sum_{t in q} log(1 + lam * tf(t,d) * |C|
+                                                / ((1-lam) * cf(t) * |d|))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PAD_TOKEN = -1
+
+
+class CollectionStats(NamedTuple):
+    """Corpus-wide statistics (output of the stats MapReduce job)."""
+
+    cf: jax.Array  # [vocab] collection term frequency
+    df: jax.Array  # [vocab] document frequency
+    total_terms: jax.Array  # scalar: |C|
+    n_docs: jax.Array  # scalar
+    avg_doc_len: jax.Array  # scalar
+
+
+def term_frequencies(q_tokens: jax.Array, d_tokens: jax.Array) -> jax.Array:
+    """tf[t, q, d] of each query term in each doc, from raw token ids.
+
+    ``q_tokens [n_q, L_q]``, ``d_tokens [n_d, L_d]`` (PAD_TOKEN-padded) ->
+    ``tf [n_q, L_q, n_d]`` float32. This *is* the sequential scan: no posting
+    list, just an equality reduction over the raw document text.
+    """
+    # [n_q, L_q, n_d, L_d] equality, reduced over L_d.
+    eq = q_tokens[:, :, None, None] == d_tokens[None, None, :, :]
+    valid_d = (d_tokens != PAD_TOKEN)[None, None, :, :]
+    return jnp.sum(eq & valid_d, axis=-1).astype(jnp.float32)
+
+
+def hiemstra_lm(
+    q_tokens: jax.Array,
+    d_tokens: jax.Array,
+    d_len: jax.Array,
+    stats: CollectionStats,
+    *,
+    lam: float = 0.15,
+    length_prior: bool = True,
+) -> jax.Array:
+    """The paper's scorer: query-likelihood LM with length prior."""
+    tf = term_frequencies(q_tokens, d_tokens)  # [n_q, L_q, n_d]
+    cf = jnp.asarray(stats.cf)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)  # [n_q, L_q]
+    q_valid = (q_tokens != PAD_TOKEN) & (cf > 0)
+    safe_cf = jnp.where(cf > 0, cf, 1.0)
+    d_len_f = jnp.maximum(d_len.astype(jnp.float32), 1.0)  # [n_d]
+    odds = (
+        lam
+        * tf
+        * jnp.asarray(stats.total_terms).astype(jnp.float32)
+        / ((1.0 - lam) * safe_cf[:, :, None] * d_len_f[None, None, :])
+    )
+    per_term = jnp.log1p(odds) * q_valid[:, :, None]
+    score = jnp.sum(per_term, axis=1)  # [n_q, n_d]
+    if length_prior:
+        score = score + jnp.log(d_len_f)[None, :]
+    # padded corpus rows (len 0) must never enter the top-k
+    return jnp.where((d_len > 0)[None, :], score, -jnp.inf)
+
+
+def bm25(
+    q_tokens: jax.Array,
+    d_tokens: jax.Array,
+    d_len: jax.Array,
+    stats: CollectionStats,
+    *,
+    k1: float = 1.2,
+    b: float = 0.75,
+) -> jax.Array:
+    """Okapi BM25 over the raw-token scan (a "new approach" in 5 lines)."""
+    tf = term_frequencies(q_tokens, d_tokens)
+    df = jnp.asarray(stats.df)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)
+    n = jnp.asarray(stats.n_docs).astype(jnp.float32)
+    idf = jnp.log1p((n - df + 0.5) / (df + 0.5))
+    q_valid = (q_tokens != PAD_TOKEN) & (df > 0)
+    norm = k1 * (1.0 - b + b * d_len.astype(jnp.float32) / stats.avg_doc_len)
+    per_term = idf[:, :, None] * tf * (k1 + 1.0) / (tf + norm[None, None, :])
+    score = jnp.sum(per_term * q_valid[:, :, None], axis=1)
+    return jnp.where((d_len > 0)[None, :], score, -jnp.inf)
+
+
+def tfidf(
+    q_tokens: jax.Array,
+    d_tokens: jax.Array,
+    d_len: jax.Array,
+    stats: CollectionStats,
+) -> jax.Array:
+    """Plain ltc-style tf-idf, length-normalized."""
+    tf = term_frequencies(q_tokens, d_tokens)
+    df = jnp.asarray(stats.df)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)
+    n = jnp.asarray(stats.n_docs).astype(jnp.float32)
+    idf = jnp.log((n + 1.0) / (df + 1.0))
+    q_valid = (q_tokens != PAD_TOKEN) & (df > 0)
+    w = jnp.log1p(tf) * idf[:, :, None] * q_valid[:, :, None]
+    score = jnp.sum(w, axis=1) / jnp.sqrt(jnp.maximum(d_len.astype(jnp.float32), 1.0))[None, :]
+    return jnp.where((d_len > 0)[None, :], score, -jnp.inf)
+
+
+def dense_dot(q_vecs: jax.Array, d_vecs: jax.Array) -> jax.Array:
+    """Dense inner-product block score — the MXU/Pallas hot path."""
+    return jax.lax.dot_general(
+        q_vecs,
+        d_vecs,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dense_cosine(q_vecs: jax.Array, d_vecs: jax.Array, eps: float = 1e-6) -> jax.Array:
+    qn = q_vecs / (jnp.linalg.norm(q_vecs, axis=-1, keepdims=True) + eps)
+    dn = d_vecs / (jnp.linalg.norm(d_vecs, axis=-1, keepdims=True) + eps)
+    return dense_dot(qn, dn)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scorer:
+    """A retrieval approach = kind + block function (+ params)."""
+
+    name: str
+    kind: str  # "lexical" | "dense"
+    fn: Callable
+
+    def score_block(self, queries, doc_block, stats: CollectionStats | None = None):
+        if self.kind == "lexical":
+            d_tokens, d_len = doc_block
+            return self.fn(queries, d_tokens, d_len, stats)
+        return self.fn(queries, doc_block)
+
+
+SCORERS: dict[str, Scorer] = {
+    "ql_lm": Scorer("ql_lm", "lexical", hiemstra_lm),
+    "bm25": Scorer("bm25", "lexical", bm25),
+    "tfidf": Scorer("tfidf", "lexical", tfidf),
+    "dense_dot": Scorer("dense_dot", "dense", dense_dot),
+    "dense_cosine": Scorer("dense_cosine", "dense", dense_cosine),
+}
+
+
+def get_scorer(name: str) -> Scorer:
+    try:
+        return SCORERS[name]
+    except KeyError:
+        raise KeyError(f"unknown scorer {name!r}; available: {sorted(SCORERS)}") from None

@@ -1,0 +1,4 @@
+from repro.data import synthetic
+from repro.data.loader import ShardedBatchLoader
+
+__all__ = ["synthetic", "ShardedBatchLoader"]

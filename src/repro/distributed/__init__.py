@@ -1,0 +1,3 @@
+from repro.distributed.sharding import AxisRules, RULES_SINGLE_POD, RULES_MULTI_POD, logical_to_spec
+
+__all__ = ["AxisRules", "RULES_SINGLE_POD", "RULES_MULTI_POD", "logical_to_spec"]

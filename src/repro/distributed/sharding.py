@@ -1,0 +1,68 @@
+"""Mesh-axis vocabulary and logical→physical sharding rules.
+
+Every model in the framework is written against *logical* axes; the mapping to
+physical mesh axes lives here, so the same model code runs on the single-pod
+``("data","model")`` mesh and the multi-pod ``("pod","data","model")`` mesh
+(and on a laptop with a 1-device mesh for smoke tests).
+
+Logical axes:
+  ``dp``     — batch / corpus-shard / edge-shard axis set (pod composes here)
+  ``tp``     — tensor/expert-parallel axis ("model")
+  ``scan``   — corpus & candidate scan axis set: all mesh axes flattened
+               (a MIREX scan wants *every* chip to own documents)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    dp: tuple[str, ...]
+    tp: str
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return (*self.dp, self.tp)
+
+    def spec(self, *logical: str | None) -> P:
+        """Build a PartitionSpec from logical axis names per dim."""
+        return P(*[logical_to_spec(self, name) for name in logical])
+
+    def shard(self, mesh: Mesh, *logical: str | None) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(*logical))
+
+
+def logical_to_spec(rules: AxisRules, name: str | None):
+    if name is None:
+        return None
+    if name == "dp":
+        return rules.dp if len(rules.dp) > 1 else rules.dp[0]
+    if name == "tp":
+        return rules.tp
+    if name == "scan":
+        return rules.all_axes
+    raise ValueError(f"unknown logical axis {name!r}")
+
+
+RULES_SINGLE_POD = AxisRules(dp=("data",), tp="model")
+RULES_MULTI_POD = AxisRules(dp=("pod", "data"), tp="model")
+
+
+def rules_for_mesh(mesh: Mesh) -> AxisRules:
+    names = mesh.axis_names
+    if "pod" in names:
+        return RULES_MULTI_POD
+    if names == ("data", "model"):
+        return RULES_SINGLE_POD
+    # degenerate test meshes: first axis = dp, last = tp
+    return AxisRules(dp=tuple(names[:-1]) or (names[0],), tp=names[-1])
+
+
+def constrain(x, mesh: Mesh, rules: AxisRules, *logical: str | None):
+    """with_sharding_constraint via logical names (no-op off-mesh)."""
+    return jax.lax.with_sharding_constraint(x, rules.shard(mesh, *logical))

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated via interpret=True on the dry-run host):
+score_topk (MIREX fused map+combine), flash_attn, flash_decode."""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,123 @@
+"""Blockwise (flash) attention Pallas kernel: causal + sliding-window +
+gemma2 logit softcap + native GQA via head-index mapping.
+
+Grid ``(B, H, n_q_blocks, n_kv_blocks)`` — the kv dimension is innermost and
+sequential, carrying the online-softmax state ``(m, l, acc)`` in VMEM
+scratch. The kv BlockSpec maps query head ``h`` to its GQA group
+``h * KV // H``, so grouped KV is read directly from the ``[B, S, KV, hd]``
+layout with no expansion. Scores tile ``[block_q, block_k]`` lives only in
+VMEM (this is the kernel the pure-JAX ``chunked_attention`` mirrors; the
+model uses that HLO on the dry-run host and this kernel on real TPUs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, window, cap, block_q, block_k, n_kv_blocks,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]  # [block_q, hd]
+    k = k_ref[0, :, 0, :]  # [block_k, hd]
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [block_q, block_k]
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    pos_q = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    pos_k = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        ok &= pos_k <= pos_q
+    if window is not None:
+        ok &= pos_q - pos_k < window
+    s = jnp.where(ok, s, NEG)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # [B, S, H, hd]
+    k: jax.Array,  # [B, S, KV, hd]
+    v: jax.Array,  # [B, S, KV, hd]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    cap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nqb, nkb = s // block_q, s // block_k
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=hd**-0.5,
+        causal=causal,
+        window=window,
+        cap=cap,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=nkb,
+    )
+    grp = h // kv
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nqb, nkb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda bb, hh, qi, ki: (bb, qi, hh, 0)),
+            pl.BlockSpec(
+                (1, block_k, 1, hd), lambda bb, hh, qi, ki: (bb, ki, hh // grp, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, hd), lambda bb, hh, qi, ki: (bb, ki, hh // grp, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, hd), lambda bb, hh, qi, ki: (bb, qi, hh, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,110 @@
+"""Split-KV decode Pallas kernel — the MIREX combine step as attention.
+
+One new token attends over a long KV cache: the cache is split into
+sequence blocks (grid), each block produces the mergeable partial
+``(m, l, acc)`` and the sequential grid folds it — the in-kernel analogue of
+the cross-chip LSE merge in ``models/attention.py`` (which handles the
+shard level; this kernel is the intra-chip split). GQA native: grid is
+(B, KV) over batch and kv heads; the q block carries that head's group.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _decode_kernel(
+    t_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, window, cap, block_s, n_s_blocks,
+):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    t = t_ref[0]
+    q = q_ref[0, 0]  # [G, hd]
+    k = k_ref[0, :, 0, :]  # [block_s, hd]
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [G, block_s]
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = pos <= t
+    if window is not None:
+        ok &= t - pos < window
+    s = jnp.where(ok, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(si == n_s_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(
+    q: jax.Array,  # [B, H, hd] — one new token per sequence
+    k_cache: jax.Array,  # [B, S, KV, hd]
+    v_cache: jax.Array,  # [B, S, KV, hd]
+    t: jax.Array,  # scalar int32 current position
+    *,
+    window: int | None = None,
+    cap: float | None = None,
+    block_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    assert s % block_s == 0, (s, block_s)
+    nsb = s // block_s
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=hd**-0.5,
+        window=window,
+        cap=cap,
+        block_s=block_s,
+        n_s_blocks=nsb,
+    )
+    q4 = q.reshape(b, kv, g, hd)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, nsb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # t scalar
+            pl.BlockSpec((1, 1, g, hd), lambda bb, hh, si: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda bb, hh, si: (bb, si, hh, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda bb, hh, si: (bb, si, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bb, hh, si: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(t, jnp.int32).reshape(1), q4, k_cache, v_cache)
+    return out.reshape(b, h, hd)

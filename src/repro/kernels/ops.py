@@ -1,0 +1,47 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container): the kernel body
+executes in Python on CPU for correctness; on a TPU backend the same call
+compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attn import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.score_topk import score_topk_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_d"))
+def score_topk(q, d, *, k: int, block_d: int = 1024):
+    """Fused streaming score+top-k (MIREX map+combine). -> (scores, ids)."""
+    return score_topk_pallas(q, d, k=k, block_d=block_d, interpret=_interpret_default())
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "cap", "block_q", "block_k")
+)
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    block_q: int = 128, block_k: int = 128):
+    """Blockwise attention (causal/window/softcap/GQA). q [B,S,H,hd]."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, cap=cap,
+        block_q=block_q, block_k=block_k, interpret=_interpret_default(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("window", "cap", "block_s"))
+def flash_decode(q, k_cache, v_cache, t, *, window=None, cap=None, block_s: int = 512):
+    """Split-KV single-token decode. q [B,H,hd], caches [B,S,KV,hd]."""
+    return flash_decode_pallas(
+        q, k_cache, v_cache, t, window=window, cap=cap,
+        block_s=block_s, interpret=_interpret_default(),
+    )

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def score_topk_ref(q, d, *, k):
+    """Materialize all scores; top-k per query."""
+    s = (q.astype(jnp.float32) @ d.astype(jnp.float32).T)
+    scores, ids = jax.lax.top_k(s, k)
+    return scores, ids.astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, cap=None):
+    """Full-matrix softmax attention with GQA/window/softcap."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    k_exp = jnp.repeat(k, g, axis=2)
+    v_exp = jnp.repeat(v, g, axis=2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k_exp, preferred_element_type=jnp.float32)
+    sc = sc * (hd**-0.5)
+    if cap is not None:
+        sc = cap * jnp.tanh(sc / cap)
+    pos = jnp.arange(s)
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        ok &= pos[:, None] - pos[None, :] < window
+    sc = jnp.where(ok[None, None], sc, NEG)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v_exp)
+
+
+def flash_decode_ref(q, k_cache, v_cache, t, *, window=None, cap=None):
+    """One-token attention over a cache, positions <= t."""
+    b, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    sc = jnp.einsum(
+        "bkgd,bskd->bkgs", q.reshape(b, kv, g, hd), k_cache,
+        preferred_element_type=jnp.float32,
+    ) * (hd**-0.5)
+    if cap is not None:
+        sc = cap * jnp.tanh(sc / cap)
+    pos = jnp.arange(k_cache.shape[1])
+    ok = pos <= t
+    if window is not None:
+        ok &= t - pos < window
+    sc = jnp.where(ok[None, None, None], sc, NEG)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, h, hd)

@@ -1,0 +1,77 @@
+"""Fused streaming score + top-k Pallas kernel — MIREX map+combine in VMEM.
+
+The paper's hot loop scores every query against a stream of documents and
+keeps a running top-k. On TPU that is: stream document blocks HBM→VMEM, hit
+the MXU with a ``[n_q, dim] × [dim, block_d]`` tile, and fold the block's
+scores into a resident ``[n_q, k]`` top-k state — the full ``[n_q, n_d]``
+score matrix never exists, so HBM traffic is ``O(n_d · dim)`` instead of
+``O(n_q · n_d)``. The TPU grid executes sequentially, which is exactly the
+combiner semantics: the output refs double as the running state.
+
+BlockSpecs: Q ``(n_q, dim)`` resident across steps; D ``(block_d, dim)``
+streamed; outputs ``(n_q, k)`` pinned to block (0, 0). MXU alignment wants
+``n_q % 8 == 0``, ``dim % 128 == 0``, ``block_d % 128 == 0``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_topk_kernel(q_ref, d_ref, out_s_ref, out_i_ref, *, block_d: int, k: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_s_ref[...] = jnp.full_like(out_s_ref, -jnp.inf)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    q = q_ref[...]  # [n_q, dim] — resident
+    d = d_ref[...]  # [block_d, dim] — this step's stream block
+    s = jax.lax.dot_general(
+        q, d, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [n_q, block_d] on the MXU
+    ids = step * block_d + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+
+    # combiner fold: merge block candidates into the running state
+    cat_s = jnp.concatenate([out_s_ref[...], s], axis=1)
+    cat_i = jnp.concatenate([out_i_ref[...], ids], axis=1)
+    top_s, pos = jax.lax.top_k(cat_s, k)
+    out_s_ref[...] = top_s
+    out_i_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+
+def score_topk_pallas(
+    q: jax.Array,  # [n_q, dim]
+    d: jax.Array,  # [n_d, dim]
+    *,
+    k: int,
+    block_d: int = 1024,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    n_q, dim = q.shape
+    n_d, _ = d.shape
+    assert n_d % block_d == 0, (n_d, block_d)
+    kernel = functools.partial(_score_topk_kernel, block_d=block_d, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_d // block_d,),
+        in_specs=[
+            pl.BlockSpec((n_q, dim), lambda i: (0, 0)),  # Q resident in VMEM
+            pl.BlockSpec((block_d, dim), lambda i: (i, 0)),  # D streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((n_q, k), lambda i: (0, 0)),
+            pl.BlockSpec((n_q, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_q, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, d)

@@ -1,0 +1,3 @@
+# Launchers: mesh construction, multi-pod dry-run, training/serving drivers.
+# NOTE: dryrun.py must be the process entry point for 512-device runs — it
+# sets XLA_FLAGS before any jax import (see its header).

@@ -1,0 +1,476 @@
+"""Cell builder: (architecture × input-shape × mesh) → a compilable step.
+
+One place defines, for every assigned cell, the step function, the abstract
+inputs (ShapeDtypeStructs — no allocation) and the in-shardings. The dry-run
+lowers+compiles cells; smoke tests and drivers run (reduced) cells with real
+arrays. Donation of params/opt/cache is part of the contract (the
+memory_analysis must reflect steady-state, not double-buffered, footprints).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs import get_config, input_specs, shapes_for
+from repro.configs.base import GNNConfig, MirexConfig, RecsysConfig, TransformerConfig
+from repro.core import scoring, topk
+from repro.core.scan import search_local
+from repro.distributed.sharding import AxisRules, rules_for_mesh
+from repro.models import gnn, recsys
+from repro.models import transformer as tfm
+from repro.optim.adamw import (
+    adamw_state_shapes,
+    adamw_update,
+    cosine_schedule,
+    opt_state_specs,
+)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable  # positional args matching abstract_inputs
+    abstract_inputs: tuple  # pytrees of ShapeDtypeStruct
+    in_shardings: tuple  # matching pytrees of NamedSharding
+    donate_argnums: tuple[int, ...] = ()
+    note: str = ""
+
+
+def _ns(mesh: Mesh, spec_tree, shape_tree):
+    """NamedShardings from a PartitionSpec tree (broadcasting scalars to P())."""
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _dp_spec(rules: AxisRules):
+    return rules.dp if len(rules.dp) > 1 else rules.dp[0]
+
+
+def _all_spec(rules: AxisRules):
+    return rules.all_axes
+
+
+LR = cosine_schedule(3e-4, warmup=100, total=10_000)
+
+
+def make_train_step(loss_fn, accum_steps: int = 1, reduce_dtype=None):
+    """One optimizer step; ``accum_steps>1`` scans microbatches and
+    accumulates grads in f32 (peak activation memory ÷ accum_steps).
+    ``reduce_dtype`` casts grads before the DP all-reduce (bf16 halves the
+    payload; §Perf hillclimb on the collective-bound recsys cells)."""
+
+    def train_step(params, opt, batch):
+        if accum_steps == 1:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            if reduce_dtype is not None:
+                grads = jax.tree.map(lambda g: g.astype(reduce_dtype), grads)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]),
+                batch,
+            )
+
+            def micro(acc, mbatch):
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mbatch)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                return acc, m
+
+            # accumulate in param dtype: the accumulator is a scan carry and
+            # XLA:CPU keeps ~4 phi copies of it — f32 doubles that cost. The
+            # few-microbatch bf16 sum costs <0.5 bits of gradient precision.
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            grads, ms = jax.lax.scan(micro, acc0, mb)
+            grads = jax.tree.map(lambda g: (g.astype(jnp.float32) / accum_steps).astype(g.dtype), grads)
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+        params, opt, gnorm = adamw_update(grads, opt, params, lr=LR)
+        return params, opt, {**metrics, "gnorm": gnorm}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch: str, shape_name: str, mesh: Mesh, rules: AxisRules) -> Cell:
+    cfg: TransformerConfig = get_config(arch)
+    spec = shapes_for(arch)[shape_name]
+    kind = spec.kind
+    b, s = spec.dims["global_batch"], spec.dims["seq_len"]
+    tp_size = mesh.shape[rules.tp]
+    dp_size = 1
+    for a in rules.dp:
+        dp_size *= mesh.shape[a]
+    pshapes = tfm.param_shapes(cfg)
+    pspecs = tfm.param_specs(cfg, rules, tp_size)
+    pshard = _ns(mesh, pspecs, pshapes)
+    batch_abs = input_specs(arch, shape_name)
+    dp = _dp_spec(rules)
+
+    if kind == "train":
+        moe_mode = "seq" if s % tp_size == 0 else "train"
+        accum = cfg.grad_accum if b % (cfg.grad_accum * dp_size) == 0 else 1
+        tokens_per_shard = (b // (dp_size * accum)) * s
+        ctx = tfm.make_context(
+            cfg, mesh, rules, tokens_per_shard=tokens_per_shard, moe_mode=moe_mode
+        )
+        loss_fn = tfm.make_loss_fn(ctx)
+        step = make_train_step(loss_fn, accum_steps=accum)
+        opt_abs = adamw_state_shapes(pshapes, moment_dtype=cfg.opt_dtype)
+        ospecs = opt_state_specs(pspecs, pshapes, rules, dp_size)
+        return Cell(
+            arch,
+            shape_name,
+            step,
+            (pshapes, opt_abs, batch_abs),
+            (pshard, _ns(mesh, ospecs, opt_abs), {
+                "tokens": NamedSharding(mesh, P(dp, None)),
+                "labels": NamedSharding(mesh, P(dp, None)),
+            }),
+            donate_argnums=(0, 1),
+        )
+
+    if kind == "prefill":
+        tokens_per_shard = (b // dp_size) * s
+        moe_mode = "seq" if s % tp_size == 0 else "train"
+        ctx = tfm.make_context(
+            cfg, mesh, rules, tokens_per_shard=tokens_per_shard, moe_mode=moe_mode
+        )
+        prefill = tfm.make_prefill_step(ctx)
+        return Cell(
+            arch,
+            shape_name,
+            prefill,
+            (pshapes, batch_abs["tokens"]),
+            (pshard, NamedSharding(mesh, P(dp, None))),
+        )
+
+    # decode: one new token against a seq_len cache
+    moe_mode = "train" if b > 1 else "replicated"
+    tokens_per_shard = max(b // dp_size, 1) if b > 1 else 1
+    ctx = tfm.make_context(
+        cfg, mesh, rules, tokens_per_shard=tokens_per_shard, moe_mode=moe_mode
+    )
+    serve = tfm.make_serve_step(ctx, batch=b)
+    cache_abs = tfm.cache_shapes(cfg, b, s)
+    cspec = tfm.cache_specs(cfg, rules, b)
+    tok_shard = NamedSharding(mesh, P(dp) if b > 1 else P())
+    return Cell(
+        arch,
+        shape_name,
+        serve,
+        (pshapes, cache_abs, batch_abs["tokens"], batch_abs["t"]),
+        (pshard, _ns(mesh, cspec, cache_abs), tok_shard, NamedSharding(mesh, P())),
+        donate_argnums=(1,),
+        note=f"moe_mode={moe_mode}" if cfg.is_moe else "",
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(arch: str, shape_name: str, mesh: Mesh, rules: AxisRules) -> Cell:
+    cfg: GNNConfig = get_config(arch)
+    spec = shapes_for(arch)[shape_name]
+    d = spec.dims
+    batch_abs = input_specs(arch, shape_name)
+    cfg = dataclasses.replace(cfg, n_classes=d["n_classes"])
+    pshapes = gnn.param_shapes(cfg, d["d_feat"])
+    pshard = _replicated(mesh, pshapes)
+    opt_abs = adamw_state_shapes(pshapes)
+    all_axes = _all_spec(rules)
+    dp = _dp_spec(rules)
+
+    if spec.kind == "full_graph":
+        fwd = gnn.make_sharded_full_graph(mesh, rules, cfg)
+
+        def loss_fn(params, batch):
+            logits = fwd(params, batch["x"], batch["src"], batch["dst"])
+            loss = gnn.xent_loss(logits, batch["labels"])
+            return loss, {"loss": loss}
+
+        step = make_train_step(loss_fn)
+        bshard = {
+            "x": NamedSharding(mesh, P(None, None)),
+            "src": NamedSharding(mesh, P(all_axes)),
+            "dst": NamedSharding(mesh, P(all_axes)),
+            "labels": NamedSharding(mesh, P(None)),
+        }
+    elif spec.kind == "minibatch":
+
+        def loss_fn(params, batch):
+            logits = gnn.forward_sampled(
+                params, batch["seed_x"], batch["hop1_x"], batch["hop2_x"], cfg
+            )
+            loss = gnn.xent_loss(logits, batch["labels"])
+            return loss, {"loss": loss}
+
+        step = make_train_step(loss_fn)
+        bshard = jax.tree.map(
+            lambda _: NamedSharding(mesh, P(all_axes)), batch_abs
+        )
+    else:  # batched_graphs
+
+        def loss_fn(params, batch):
+            logits = gnn.forward_batched_graphs(
+                params, batch["x"], batch["src"], batch["dst"], cfg
+            )
+            loss = gnn.xent_loss(logits, batch["labels"])
+            return loss, {"loss": loss}
+
+        step = make_train_step(loss_fn)
+        bshard = jax.tree.map(lambda _: NamedSharding(mesh, P(dp)), batch_abs)
+
+    dp_size = 1
+    for a in rules.dp:
+        dp_size *= mesh.shape[a]
+    ospecs = opt_state_specs(
+        jax.tree.map(lambda s: P(*([None] * s.ndim)), pshapes,
+                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+        pshapes, rules, dp_size,
+    )
+    return Cell(
+        arch,
+        shape_name,
+        step,
+        (pshapes, opt_abs, batch_abs),
+        (pshard, _ns(mesh, ospecs, opt_abs), bshard),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(arch: str, shape_name: str, mesh: Mesh, rules: AxisRules) -> Cell:
+    cfg: RecsysConfig = get_config(arch)
+    spec = shapes_for(arch)[shape_name]
+    batch_abs = input_specs(arch, shape_name)
+    pshapes = recsys.param_shapes(cfg)
+    pshard = _replicated(mesh, pshapes)
+    all_axes = _all_spec(rules)
+    n_all = 1
+    for a in rules.all_axes:
+        n_all *= mesh.shape[a]
+
+    if spec.kind == "rec_train":
+
+        def loss_fn(params, batch):
+            loss = recsys.train_logits(params, batch, cfg)
+            return loss, {"loss": loss}
+
+        # NOTE §Perf: casting grads to bf16 post-grad does NOT shrink the
+        # all-reduce (the partitioner reduces where grads materialize, before
+        # the cast) — measured identical collective term; hypothesis refuted.
+        step = make_train_step(loss_fn)
+        opt_abs = adamw_state_shapes(pshapes)
+        ospecs = opt_state_specs(
+            jax.tree.map(lambda s: P(*([None] * s.ndim)), pshapes,
+                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+            pshapes, rules, max(mesh.shape[a] for a in rules.dp),
+        )
+        bshard = jax.tree.map(lambda _: NamedSharding(mesh, P(all_axes)), batch_abs)
+        return Cell(
+            arch, shape_name, step,
+            (pshapes, opt_abs, batch_abs),
+            (pshard, _ns(mesh, ospecs, opt_abs), bshard),
+            donate_argnums=(0, 1),
+        )
+
+    if spec.kind == "rec_serve":
+
+        def serve(params, batch):
+            if cfg.variant == "fm":
+                return recsys.fm_forward(params, batch, cfg)
+            if cfg.variant == "dcn-v2":
+                return recsys.dcn_forward(params, batch, cfg)
+            if cfg.variant == "mind":
+                return recsys.mind_interests(params, batch["history"], cfg)
+            return recsys.sasrec_forward(params, batch["history"], cfg)[:, -1]
+
+        bshard = jax.tree.map(lambda _: NamedSharding(mesh, P(all_axes)), batch_abs)
+        return Cell(arch, shape_name, serve, (pshapes, batch_abs), (pshard, bshard))
+
+    # retrieval: the MIREX scan — candidates sharded over the whole mesh,
+    # per-shard score + local top-k, k-bounded all-gather merge.
+    k = 1000
+    n_cand = spec.dims["n_candidates"]
+    n_loc = n_cand // n_all
+
+    def local_retrieve(params, user_batch, cand_ids):
+        idx = 0
+        for a in rules.all_axes:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        if cfg.variant == "dcn-v2":
+            scores = recsys.score_block_dcn(params, user_batch, cand_ids, cfg)
+        else:
+            cand_e = params["tables"][-1][cand_ids] if cfg.variant == "fm" else params["items"][cand_ids]
+            if cfg.variant == "fm":
+                # FM score is linear in the candidate: q·v_c + w_c (+ user const)
+                q = recsys.user_query_vector(params, user_batch, cfg)
+                scores = recsys.score_block_dot(q, cand_e) + params["linear"][-1][cand_ids][None, :]
+            elif cfg.variant == "mind":
+                caps = recsys.mind_interests(params, user_batch["history"], cfg)
+                scores = recsys.score_block_multi_interest(caps, cand_e)
+            else:
+                q = recsys.user_query_vector(params, user_batch, cfg)
+                scores = recsys.score_block_dot(q, cand_e)
+        state = topk.topk_dense(scores, min(k, scores.shape[-1]))
+        state = topk.TopKState(state.scores, state.ids + idx * n_loc)
+        # tree merge: §Perf — 3.8× less merge traffic than staged gather
+        return topk.merge_across(state, rules.all_axes, method="tree")
+
+    pspecs_tree = jax.tree.map(
+        lambda s: P(*([None] * s.ndim)), pshapes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    user_abs = {kk: v for kk, v in batch_abs.items() if kk != "cand_ids"}
+    user_specs = jax.tree.map(lambda _: P(), user_abs)
+    retrieve = shard_map(
+        local_retrieve,
+        mesh=mesh,
+        in_specs=(pspecs_tree, user_specs, P(all_axes)),
+        out_specs=topk.TopKState(P(), P()),
+        check_rep=False,
+    )
+    bshard = {
+        **jax.tree.map(lambda _: NamedSharding(mesh, P()), user_abs),
+        "cand_ids": NamedSharding(mesh, P(all_axes)),
+    }
+    return Cell(
+        arch, shape_name, lambda p, u, c: retrieve(p, u, c),
+        (pshapes, user_abs, batch_abs["cand_ids"]),
+        (pshard, jax.tree.map(lambda _: NamedSharding(mesh, P()), user_abs),
+         NamedSharding(mesh, P(all_axes))),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MIREX cells (the paper system itself)
+# ---------------------------------------------------------------------------
+
+def _mirex_cell(arch: str, shape_name: str, mesh: Mesh, rules: AxisRules) -> Cell:
+    cfg: MirexConfig = get_config(arch)
+    spec = shapes_for(arch)[shape_name]
+    batch_abs = input_specs(arch, shape_name)
+    all_axes = _all_spec(rules)
+    n_all = 1
+    for a in rules.all_axes:
+        n_all *= mesh.shape[a]
+
+    if spec.kind == "scan":
+        scorer = scoring.get_scorer(cfg.scorer)
+        n_loc = spec.dims["n_docs"] // n_all
+        stats_abs = scoring.CollectionStats(
+            cf=jax.ShapeDtypeStruct((cfg.vocab,), jnp.int32),
+            df=jax.ShapeDtypeStruct((cfg.vocab,), jnp.int32),
+            total_terms=jax.ShapeDtypeStruct((), jnp.int32),
+            n_docs=jax.ShapeDtypeStruct((), jnp.int32),
+            avg_doc_len=jax.ShapeDtypeStruct((), jnp.float32),
+        )
+
+        n_q = spec.dims["n_queries"]
+        q_chunk = min(n_q, 512)  # bound the [q, L_q, d, L_d] match tensor
+        assert n_q % q_chunk == 0
+
+        def local_scan(q_tokens, d_tokens, d_len, stats):
+            idx = 0
+            for a in rules.all_axes:
+                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+
+            # lexical chunk: bounded by the [q_chunk, L_q, chunk, L_d]
+            # match tensor and by the per-shard doc count
+            lex_chunk = min(1024, n_loc)
+
+            def one_q_block(qb):
+                return search_local(
+                    qb, (d_tokens, d_len), scorer,
+                    k=cfg.k, chunk_size=lex_chunk, stats=stats,
+                    doc_id_offset=idx * n_loc,
+                )
+
+            states = jax.lax.map(
+                one_q_block, q_tokens.reshape(n_q // q_chunk, q_chunk, -1)
+            )
+            state = topk.TopKState(
+                states.scores.reshape(n_q, cfg.k), states.ids.reshape(n_q, cfg.k)
+            )
+            return topk.merge_across(state, rules.all_axes, method="tree")
+
+        fn = shard_map(
+            local_scan,
+            mesh=mesh,
+            in_specs=(P(), P(all_axes), P(all_axes),
+                      jax.tree.map(lambda _: P(), stats_abs)),
+            out_specs=topk.TopKState(P(), P()),
+            check_rep=False,
+        )
+        shardings = (
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P(all_axes)),
+            NamedSharding(mesh, P(all_axes)),
+            jax.tree.map(lambda _: NamedSharding(mesh, P()), stats_abs),
+        )
+        return Cell(
+            arch, shape_name, fn,
+            (batch_abs["q_tokens"], batch_abs["d_tokens"], batch_abs["d_len"], stats_abs),
+            shardings,
+        )
+
+    # dense_scan
+    n_loc = spec.dims["n_docs"] // n_all
+    k = cfg.k
+
+    def local_dense(q_vecs, d_vecs):
+        idx = 0
+        for a in rules.all_axes:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        state = search_local(
+            q_vecs, d_vecs, scoring.get_scorer("dense_dot"),
+            k=k, chunk_size=min(cfg.chunk_size, n_loc), doc_id_offset=idx * n_loc,
+        )
+        return topk.merge_across(state, rules.all_axes, method="tree")
+
+    fn = shard_map(
+        local_dense,
+        mesh=mesh,
+        in_specs=(P(), P(all_axes)),
+        out_specs=topk.TopKState(P(), P()),
+        check_rep=False,
+    )
+    return Cell(
+        arch, shape_name, fn,
+        (batch_abs["q_vecs"], batch_abs["d_vecs"]),
+        (NamedSharding(mesh, P()), NamedSharding(mesh, P(all_axes))),
+    )
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    rules = rules_for_mesh(mesh)
+    cfg = get_config(arch)
+    if isinstance(cfg, TransformerConfig):
+        return _lm_cell(arch, shape_name, mesh, rules)
+    if isinstance(cfg, GNNConfig):
+        return _gnn_cell(arch, shape_name, mesh, rules)
+    if isinstance(cfg, RecsysConfig):
+        return _recsys_cell(arch, shape_name, mesh, rules)
+    return _mirex_cell(arch, shape_name, mesh, rules)

@@ -1,0 +1,187 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax -------------------------------------
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape) on
+the production meshes, prove it fits, and harvest roofline inputs.
+
+The two lines above MUST stay the first statements of this module: jax locks
+the device count at first init, and the dry-run (and only the dry-run) needs
+512 placeholder host devices so ``jax.make_mesh((2,16,16))`` can build the
+production mesh. Run as::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # orchestrates
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+``--all`` runs each cell in a fresh subprocess (compile arenas on a 1-core
+host don't fragment across cells; one bad cell can't take down the sweep) and
+caches per-cell JSON under results/dryrun/<mesh>/<arch>__<shape>.json. A
+second sweep re-runs only missing/failed cells.
+
+Per cell the JSON records: memory_analysis (must fit 16 GB/chip),
+cost_analysis (XLA's own numbers), and the trip-count-aware HLO parse
+(hloparse.py) that §Roofline consumes: per-device FLOPs, bytes, collective
+payloads + group sizes.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    import jax
+
+    from repro.launch.cells import build_cell
+    from repro.launch.hloparse import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.size,
+        "ok": False,
+    }
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        cell = build_cell(arch, shape, mesh)
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        t_build = time.time()
+        lowered = jitted.lower(*cell.abstract_inputs)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        # donated (aliased) buffers are not double counted
+        mem["peak_bytes"] = (
+            mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"] - mem["alias_bytes"]
+        )
+        mem["fits_16GB"] = mem["peak_bytes"] <= HBM_PER_CHIP
+        rec["memory"] = mem
+
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+        txt = compiled.as_text()
+        rec["hlo"] = analyze_hlo(txt)
+        # TPU projection: subtract whole-stack f32 copies of bf16 inputs that
+        # exist only because XLA:CPU has no native bf16 dot (hloparse docs).
+        artifact = rec["hlo"]["cpu_upcast_artifact_bytes"]
+        mem["peak_bytes_tpu_projected"] = mem["peak_bytes"] - artifact
+        mem["fits_16GB_tpu_projected"] = mem["peak_bytes_tpu_projected"] <= HBM_PER_CHIP
+        rec["hlo_lines"] = txt.count("\n")
+        rec["note"] = cell.note
+        rec["timing_s"] = {
+            "build": round(t_build - t0, 2),
+            "lower": round(t_lower - t_build, 2),
+            "compile": round(t_compile - t_lower, 2),
+        }
+        rec["ok"] = True
+    return rec
+
+
+def result_path(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    d = os.path.join(RESULTS_DIR, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape}.json")
+
+
+def run_and_save(arch: str, shape: str, multi_pod: bool) -> dict:
+    path = result_path(arch, shape, multi_pod)
+    try:
+        rec = run_cell(arch, shape, multi_pod)
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        rec = {
+            "arch": arch,
+            "shape": shape,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "ok": False,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def orchestrate(multi_pod: bool, *, force: bool = False, include_mirex: bool = True):
+    """Run every cell in its own subprocess; skip cached successes."""
+    from repro.configs import all_cells
+
+    cells = all_cells(include_mirex=include_mirex)
+    failures = []
+    for arch, shape in cells:
+        path = result_path(arch, shape, multi_pod)
+        if not force and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("ok"):
+                    print(f"[cached ] {arch} × {shape}")
+                    continue
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape,
+        ]
+        if multi_pod:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        proc = subprocess.run(cmd, capture_output=True, text=True)
+        with open(path) as f:
+            rec = json.load(f) if os.path.exists(path) else {"ok": False}
+        status = "ok" if rec.get("ok") else "FAIL"
+        print(f"[{status:6s}] {arch} × {shape}  ({time.time()-t0:.0f}s)")
+        if not rec.get("ok"):
+            failures.append((arch, shape, rec.get("error", proc.stderr[-500:])))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for a, s, e in failures:
+            print(f"  {a} × {s}: {e}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        fails = orchestrate(args.multi_pod, force=args.force)
+        sys.exit(1 if fails else 0)
+    rec = run_and_save(args.arch, args.shape, args.multi_pod)
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"}, indent=1))
+    if rec["ok"]:
+        print(f"memory per device: {rec['memory']['peak_bytes']/2**30:.2f} GiB "
+              f"(fits 16GB: {rec['memory']['fits_16GB']})")
+    sys.exit(0 if rec["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

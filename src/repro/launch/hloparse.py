@@ -1,0 +1,303 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` visits a while body **once**, but our models scan
+over layers (and chunked attention scans over query blocks), so its FLOPs are
+off by ~n_layers. This parser rebuilds the cost from the HLO text itself:
+
+  * splits the module into computations and builds a per-computation symbol
+    table (every ``%name = type[shape]`` definition);
+  * costs ``dot``/``convolution``/oneDNN-matmul custom-calls analytically
+    (2 · prod(out) · prod(contracted));
+  * charges every top-level op's operand+output bytes as HBM traffic —
+    *top-level* because optimized HLO has already fused elementwise chains,
+    so fusion internals correctly don't count;
+  * collects collective payloads (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute) with their replica-group sizes;
+  * resolves the call graph: ``while`` multiplies its body+condition by the
+    trip count (largest s32 constant in the condition — exact for lax.scan /
+    fori_loop), fusions/calls recurse once.
+
+Everything is per-device (the SPMD module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"((?:\([^)]*\)|\S+))\s+([\w\-]+)\(")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body)=%([\w.\-]+)")
+_COND_ATTR_RE = re.compile(r"condition=%([\w.\-]+)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_MAT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+# ops that move no real data / are layout-only
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[list[int], str] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return ([int(d) for d in dims.split(",") if d], dt)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    out_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    symbols: dict[str, str]  # %name -> type string
+
+
+def split_computations(txt: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in txt.splitlines():
+        s = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->.*\{$", s)
+        if header:
+            cur = Computation(name=header.group(1), ops=[], symbols={})
+            comps[cur.name] = cur
+            # parameters declared in the header: name: type
+            for pname, ptype in re.findall(r"([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\],]+))", header.group(2)):
+                cur.symbols[pname] = ptype
+            if "ENTRY" in s:
+                comps["__entry__"] = cur
+            continue
+        if s == "}" or s.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        d = _DEF_RE.match(s)
+        if not d:
+            continue
+        name, rhs = d.groups()
+        m = _OP_RE.match(rhs)
+        if not m:
+            continue
+        out_type, kind = m.groups()
+        cur.symbols[name] = out_type
+        cur.ops.append(Op(name=name, kind=kind, out_type=out_type, line=s))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _operand_names(line: str) -> list[str]:
+    m = re.search(r"\w+\(([^)]*)", line)
+    if not m:
+        return []
+    return re.findall(r"%([\w.\-]+)", m.group(1))
+
+
+def _dot_flops(op: Op, symbols: dict[str, str]) -> float:
+    out = _shape_dims(op.out_type)
+    if out is None:
+        return 0.0
+    out_dims, _ = out
+    operands = _operand_names(op.line)
+    lhs_type = symbols.get(operands[0], "") if operands else ""
+    lhs = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contracted = 1
+    if lhs and m and m.group(1):
+        lhs_dims, _ = lhs
+        for i in m.group(1).split(","):
+            contracted *= lhs_dims[int(i)]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * contracted
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_MAT_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    collective_counts: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    collective_groups: dict = dataclasses.field(default_factory=dict)  # max group size
+
+    def scaled(self, k: float) -> "Costs":
+        c = Costs(self.flops * k, self.bytes_accessed * k)
+        for kk, v in self.collective_bytes.items():
+            c.collective_bytes[kk] = v * k
+        for kk, v in self.collective_counts.items():
+            c.collective_counts[kk] = int(v * k)
+        c.collective_groups = dict(self.collective_groups)  # sizes don't scale
+        return c
+
+    def add(self, o: "Costs"):
+        self.flops += o.flops
+        self.bytes_accessed += o.bytes_accessed
+        for kk, v in o.collective_bytes.items():
+            self.collective_bytes[kk] += v
+        for kk, v in o.collective_counts.items():
+            self.collective_counts[kk] += v
+        for kk, v in o.collective_groups.items():
+            self.collective_groups[kk] = max(self.collective_groups.get(kk, 1), v)
+
+
+def _comp_cost(comp: Computation, comps: dict[str, Computation], memo: dict) -> Costs:
+    if comp.name in memo:
+        return memo[comp.name]
+    total = Costs()
+    for op in comp.ops:
+        if op.kind in _FREE_OPS:
+            continue
+        out_bytes = _shape_bytes(op.out_type)
+        opnd_bytes = sum(_shape_bytes(comp.symbols.get(o, "")) for o in _operand_names(op.line))
+        if op.kind == "while":
+            body = _CALL_ATTR_RE.search(op.line)
+            cond = _COND_ATTR_RE.search(op.line)
+            trip = 1
+            if cond and cond.group(1) in comps:
+                trip = _trip_count(comps[cond.group(1)])
+            if body and body.group(1) in comps:
+                inner = _comp_cost(comps[body.group(1)], comps, memo)
+                total.add(inner.scaled(trip))
+            continue
+        if op.kind in ("fusion", "call", "async-start", "conditional"):
+            callee = _CALL_ATTR_RE.search(op.line)
+            if callee and callee.group(1) in comps:
+                total.add(_comp_cost(comps[callee.group(1)], comps, memo))
+            total.bytes_accessed += out_bytes + opnd_bytes
+            continue
+        if op.kind == "dot" or op.kind == "convolution":
+            total.flops += _dot_flops(op, comp.symbols)
+            total.bytes_accessed += out_bytes + opnd_bytes
+            continue
+        if op.kind == "custom-call" and "matmul" in op.line:
+            # oneDNN matmul: infer K from operand 0 last dim
+            operands = _operand_names(op.line)
+            lhs = _shape_dims(comp.symbols.get(operands[0], "")) if operands else None
+            out = _shape_dims(op.out_type)
+            if lhs and out:
+                n_out = 1
+                for d in out[0]:
+                    n_out *= d
+                total.flops += 2.0 * n_out * (lhs[0][-1] if lhs[0] else 1)
+            total.bytes_accessed += out_bytes + opnd_bytes
+            continue
+        if op.kind in COLLECTIVES:
+            total.collective_bytes[op.kind] += out_bytes
+            total.collective_counts[op.kind] += 1
+            total.collective_groups[op.kind] = max(
+                total.collective_groups.get(op.kind, 1), _group_size(op.line)
+            )
+            total.bytes_accessed += out_bytes + opnd_bytes
+            continue
+        total.bytes_accessed += out_bytes + opnd_bytes
+    memo[comp.name] = total
+    return total
+
+
+def entry_f32_upcast_bytes(comps: dict[str, Computation]) -> int:
+    """Bytes of whole-array bf16→f32 copies XLA:CPU makes of inputs.
+
+    XLA:CPU float-normalizes bf16 dot operands to f32 and hoists the
+    conversion of loop-invariant stacks (weights, KV caches) out of while
+    loops — materializing full f32 copies that a native-bf16 TPU never
+    creates. Detected as entry-scope convert/convert-fusion ops producing
+    f32[dims] from a bf16[dims] value. Used to report a TPU-projected peak
+    alongside the raw CPU number (methodology in EXPERIMENTS §Dry-run).
+    """
+    entry = comps.get("__entry__")
+    if entry is None:
+        return 0
+    total = 0
+    for op in entry.ops:
+        if op.kind not in ("convert", "fusion"):
+            continue
+        out = _shape_dims(op.out_type)
+        if out is None or out[1] != "f32":
+            continue
+        if op.kind == "fusion" and "convert" not in op.line:
+            continue
+        operands = _operand_names(op.line)
+        if len(operands) != 1:
+            continue
+        src = _shape_dims(entry.symbols.get(operands[0], ""))
+        if src is None or src[1] != "bf16" or src[0] != out[0]:
+            continue
+        n = 1
+        for dim in out[0]:
+            n *= dim
+        if n * 4 >= 2**27:  # only count ≥128 MiB copies (whole stacks)
+            total += n * 4
+    return total
+
+
+def analyze_hlo(txt: str) -> dict:
+    """Parse optimized HLO -> per-device costs dict (trip-count aware)."""
+    comps = split_computations(txt)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: dict[str, Costs] = {}
+    c = _comp_cost(entry, comps, memo)
+    return {
+        "flops": c.flops,
+        "bytes_accessed": c.bytes_accessed,
+        "collective_bytes": dict(c.collective_bytes),
+        "collective_counts": dict(c.collective_counts),
+        "collective_group_sizes": dict(c.collective_groups),
+        "cpu_upcast_artifact_bytes": entry_f32_upcast_bytes(comps),
+    }

@@ -1,0 +1,244 @@
+"""§Roofline: three-term roofline per (arch × shape) from the dry-run JSONs.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+    collective = Σ_type ring_traffic(type) / link_bw        (50 GB/s/link)
+
+HLO_FLOPs/bytes come from the trip-count-aware HLO parse (hloparse.py), not
+``cost_analysis()`` (which counts while bodies once). Ring formulas per
+collective type with the recorded group size n:
+    all-reduce 2(n-1)/n·B, all-gather (n-1)/n·B_out, reduce-scatter
+    (n-1)·B_out, all-to-all (n-1)/n·B, collective-permute B.
+
+MODEL_FLOPS is the *useful* work: 6·N_active·T for LM training, 2·N_active·T
+for inference, analytic per-family formulas otherwise (functions below). The
+MODEL/HLO ratio exposes remat recompute and padding waste.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh 16x16]
+writes results/roofline_<mesh>.md + .json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results")
+
+
+def collective_time(hlo: dict) -> float:
+    t = 0.0
+    groups = hlo.get("collective_group_sizes", {})
+    for kind, bytes_ in hlo.get("collective_bytes", {}).items():
+        n = max(groups.get(kind, 2), 2)
+        if kind == "all-reduce":
+            eff = 2 * (n - 1) / n * bytes_
+        elif kind == "all-gather":
+            eff = (n - 1) / n * bytes_
+        elif kind == "reduce-scatter":
+            eff = (n - 1) * bytes_  # recorded bytes are the scattered output
+        elif kind == "all-to-all":
+            eff = (n - 1) / n * bytes_
+        else:  # collective-permute
+            eff = bytes_
+        t += eff / LINK_BW
+    return t
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (useful work) per family
+# ---------------------------------------------------------------------------
+
+def _lm_model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from repro.configs import get_config, shapes_for
+
+    cfg = get_config(arch)
+    spec = shapes_for(arch)[shape]
+    b, s = spec.dims["global_batch"], spec.dims["seq_len"]
+    n_active = cfg.active_param_count()
+    l, h, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    if spec.kind == "train":
+        tokens = b * s
+        attn = 12 * l * b * s * s * h * hd  # fwd 4·L·B·S²·H·hd, ×3 fwd+bwd
+        return (6 * n_active * tokens + attn) / n_devices
+    if spec.kind == "prefill":
+        tokens = b * s
+        attn = 4 * l * b * s * s * h * hd / 2  # causal half
+        return (2 * n_active * tokens + attn) / n_devices
+    # decode: one token over an S-long cache
+    attn = 4 * l * b * s * h * hd
+    return (2 * n_active * b + attn) / n_devices
+
+
+def _gnn_model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from repro.configs import get_config, shapes_for
+
+    cfg = get_config(arch)
+    spec = shapes_for(arch)[shape]
+    d = cfg.d_hidden
+    a = (1 + len(cfg.aggregators) * len(cfg.scalers)) * d
+    dims = spec.dims
+    if spec.kind == "full_graph":
+        n, e, f = dims["n_nodes"], dims["n_edges"], dims["d_feat"]
+        per_layer = 2 * e * (2 * d * d) + 2 * n * (a * d)
+        fwd = 2 * n * f * d + cfg.n_layers * per_layer + 2 * n * d * dims["n_classes"]
+        return 3 * fwd / n_devices  # train step
+    if spec.kind == "minibatch":
+        bsz = dims["batch_nodes"]
+        k1, k2 = dims["fanout"]
+        f = dims["d_feat"]
+        n_tree = bsz * (1 + k1 + k1 * k2)
+        fwd = 2 * n_tree * f * d + 2 * (bsz * k1 * k2 + bsz * k1) * 2 * d * d \
+            + 2 * (bsz + bsz * k1) * a * d
+        return 3 * fwd / n_devices
+    bsz, n, e, f = dims["batch"], dims["n_nodes"], dims["n_edges"], dims["d_feat"]
+    per_layer = 2 * e * 2 * d * d + 2 * n * a * d
+    fwd = bsz * (2 * n * f * d + cfg.n_layers * per_layer)
+    return 3 * fwd / n_devices
+
+
+def _recsys_model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from repro.configs import get_config, shapes_for
+
+    cfg = get_config(arch)
+    spec = shapes_for(arch)[shape]
+    d = cfg.embed_dim
+    dims = spec.dims
+
+    def fwd_per_example() -> float:
+        if cfg.variant == "fm":
+            return 4.0 * cfg.n_sparse * d
+        if cfg.variant == "dcn-v2":
+            x0 = cfg.n_dense + cfg.n_sparse * d
+            cross = cfg.n_cross_layers * 2 * x0 * x0
+            mlp_dims = (x0, *cfg.mlp_dims, 1)
+            mlp = sum(2 * a * b for a, b in zip(mlp_dims[:-1], mlp_dims[1:]))
+            return cross + mlp
+        if cfg.variant == "mind":
+            l = cfg.seq_len
+            return 2 * l * d * d + cfg.capsule_iters * 4 * l * cfg.n_interests * d
+        # sasrec
+        l = cfg.seq_len
+        per_blk = 8 * l * d * d + 4 * l * l * d + 16 * l * d * d
+        return cfg.n_blocks * per_blk
+
+    if spec.kind == "rec_train":
+        return 3 * dims["batch"] * fwd_per_example() / n_devices
+    if spec.kind == "rec_serve":
+        return dims["batch"] * fwd_per_example() / n_devices
+    # retrieval: per-candidate score
+    n_c = dims["n_candidates"]
+    if cfg.variant == "dcn-v2":
+        return n_c * fwd_per_example() / n_devices
+    if cfg.variant == "mind":
+        return 2.0 * n_c * cfg.n_interests * d / n_devices
+    return 2.0 * n_c * d / n_devices
+
+
+def _mirex_model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from repro.configs import get_config, shapes_for
+
+    cfg = get_config(arch)
+    spec = shapes_for(arch)[shape]
+    dims = spec.dims
+    if spec.kind == "dense_scan":
+        return 2.0 * dims["n_queries"] * dims["n_docs"] * dims["dim"] / n_devices
+    # lexical scan: 1 "op" per (query-term, doc-token) comparison
+    return (
+        dims["n_queries"] * cfg.max_q_len * dims["n_docs"] * dims["doc_len"] / n_devices
+    )
+
+
+def model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from repro.configs import family
+
+    fam = family(arch)
+    return {
+        "lm": _lm_model_flops,
+        "gnn": _gnn_model_flops,
+        "recsys": _recsys_model_flops,
+        "mirex": _mirex_model_flops,
+    }[fam](arch, shape, n_devices)
+
+
+# ---------------------------------------------------------------------------
+
+FIX_HINTS = {
+    "compute": "raise useful-FLOP share (MODEL/HLO ratio): lighter remat policy / fused kernels to remove recompute and masked-block waste",
+    "memory": "fuse the streaming hot loop (Pallas kernel keeps the working set in VMEM; on this cell most bytes are re-read activations)",
+    "collective": "shrink/overlap the dominant collective: bf16 payloads, reduce-scatter instead of all-reduce, async overlap with compute",
+}
+
+
+def analyze(mesh: str = "16x16") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "dryrun", mesh, "*.json"))):
+        r = json.load(open(f))
+        if not r.get("ok"):
+            continue
+        hlo = r["hlo"]
+        n_dev = r["n_devices"]
+        t_c = hlo["flops"] / PEAK
+        t_m = hlo["bytes_accessed"] / HBM_BW
+        t_x = collective_time(hlo)
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)), key=lambda kv: kv[1])[0]
+        mf = model_flops(r["arch"], r["shape"], n_dev)
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "mesh": mesh,
+            "compute_s": t_c,
+            "memory_s": t_m,
+            "collective_s": t_x,
+            "bottleneck": dom,
+            "model_flops_per_dev": mf,
+            "hlo_flops_per_dev": hlo["flops"],
+            "useful_ratio": mf / hlo["flops"] if hlo["flops"] else float("nan"),
+            "roofline_fraction": (
+                mf / PEAK / max(t_c, t_m, t_x) if max(t_c, t_m, t_x) > 0 else 0.0
+            ),
+            "peak_gib": r["memory"]["peak_bytes"] / 2**30,
+            "peak_gib_tpu": r["memory"].get("peak_bytes_tpu_projected", r["memory"]["peak_bytes"]) / 2**30,
+            "hint": FIX_HINTS[dom],
+        })
+    return rows
+
+
+def emit(rows: list[dict], mesh: str):
+    out_json = os.path.join(RESULTS, f"roofline_{mesh}.json")
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    lines = [
+        f"### Roofline — {mesh} mesh (per device; 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)",
+        "",
+        "| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck | MODEL/HLO | roofline frac | mem GiB (raw/proj) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['bottleneck']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2%} | {r['peak_gib']:.1f}/{r['peak_gib_tpu']:.1f} |"
+        )
+    md = "\n".join(lines) + "\n"
+    with open(os.path.join(RESULTS, f"roofline_{mesh}.md"), "w") as f:
+        f.write(md)
+    return md
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = analyze(args.mesh)
+    print(emit(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models import attention, common, embedding, gnn, moe, recsys, transformer
+
+__all__ = ["attention", "common", "embedding", "gnn", "moe", "recsys", "transformer"]

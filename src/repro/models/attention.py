@@ -1,0 +1,231 @@
+"""Attention: chunked (flash-style) training path + cache decode paths.
+
+Train/prefill uses an online **chunked** attention: an outer ``lax.scan`` over
+query blocks keeps the live score tile at ``[B, H, q_block, S]`` instead of
+``[B, H, S, S]`` — the pure-JAX analogue of the Pallas ``flash_attn`` kernel
+(which replaces it on real TPUs; this HLO is what the dry-run lowers).
+
+Decode over a **sequence-sharded KV cache** is the MIREX pattern as attention
+(DESIGN §3): each shard scores the new token against its KV chunk (map), keeps
+``(max, sum, weighted-value)`` — a mergeable summary (combine) — and shards
+merge with a log-sum-exp reduction (reduce). Implemented in ``shard_map`` so
+locality is by construction.
+
+``window_active`` is a *traced* boolean (per-layer, from the scan over
+stacked layers) so gemma2's local/global alternation lives in one compiled
+layer body.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models.common import softcap
+
+NEG = -1e30
+
+
+def _mask_ok(pos_q, pos_k, *, causal: bool, window: int | None, window_active):
+    """Bool mask [len(pos_q), len(pos_k)] from global positions.
+
+    ``window_active`` may be a traced scalar bool; the window constraint is
+    OR-ed away when inactive so one HLO serves local and global layers.
+    """
+    ok = jnp.ones((pos_q.shape[0], pos_k.shape[0]), bool)
+    if causal:
+        ok &= pos_k[None, :] <= pos_q[:, None]
+    if window is not None:
+        in_window = pos_q[:, None] - pos_k[None, :] < window
+        if window_active is None:
+            ok &= in_window
+        else:
+            ok &= in_window | ~window_active
+    return ok
+
+
+def chunked_attention(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Skv, H, hd] — GQA pre-expanded by the caller
+    v: jax.Array,  # [B, Skv, H, hd]
+    *,
+    q_block: int,
+    causal: bool = True,
+    window: int | None = None,
+    window_active=None,
+    cap: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    assert sq % q_block == 0, (sq, q_block)
+    nqb = sq // q_block
+    scale = hd**-0.5
+
+    qb = jnp.moveaxis(q.reshape(b, nqb, q_block, h, hd), 1, 0)
+    pos_k = jnp.arange(skv)
+
+    def one_block(carry, xs):
+        qi, q_blk = xs  # [B, q_block, H, hd]
+        pos_q = q_offset + qi * q_block + jnp.arange(q_block)
+        s = jnp.einsum("bqhd,bshd->bhqs", q_blk, k, preferred_element_type=jnp.float32)
+        s = softcap(s * scale, cap)
+        ok = _mask_ok(pos_q, pos_k, causal=causal, window=window, window_active=window_active)
+        s = jnp.where(ok[None, None], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+        return carry, o
+
+    # remat per block: backward recomputes the block's scores instead of
+    # stacking [B,H,S,S] fp32 across the scan — flash-attention's memory
+    # contract, expressed at the JAX level.
+    one_block = jax.checkpoint(
+        one_block, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+    )
+    _, outs = jax.lax.scan(one_block, None, (jnp.arange(nqb), qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+
+
+def attend_cache(
+    q: jax.Array,  # [B, H, hd] — one new token
+    k_cache: jax.Array,  # [B, S, KV, hd]
+    v_cache: jax.Array,  # [B, S, KV, hd]
+    t: jax.Array,  # position of the new token (scalar int32)
+    *,
+    window: int | None = None,
+    window_active=None,
+    cap: float | None = None,
+    pos_k: jax.Array | None = None,
+) -> jax.Array:
+    """Full-cache decode attention (replicated/small-cache path + oracle)."""
+    b, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = hd**-0.5
+    if pos_k is None:
+        pos_k = jnp.arange(k_cache.shape[1])
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs",
+        q.reshape(b, kv, g, hd),
+        k_cache,
+        preferred_element_type=jnp.float32,
+    )
+    s = softcap(s * scale, cap)
+    ok = pos_k <= t
+    if window is not None:
+        in_w = t - pos_k < window
+        ok &= in_w if window_active is None else (in_w | ~window_active)
+    s = jnp.where(ok[None, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, h, hd)
+
+
+def _partial_attend(q, k_loc, v_loc, pos_loc, t, *, window, window_active, cap,
+                    pos_limit=None):
+    """Per-shard partial softmax summary: (m, l, o~) — the mergeable combiner.
+
+    ``pos_limit`` (inclusive) defaults to ``t``; pass ``t-1`` when position t
+    is handled out-of-band (decode's new-token term). The window is always
+    relative to the query position ``t``.
+    """
+    b, h, hd = q.shape
+    kv = k_loc.shape[2]
+    g = h // kv
+    scale = hd**-0.5
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", q.reshape(b, kv, g, hd), k_loc,
+        preferred_element_type=jnp.float32,
+    )
+    s = softcap(s * scale, cap)
+    ok = pos_loc <= (t if pos_limit is None else pos_limit)
+    if window is not None:
+        in_w = t - pos_loc < window
+        ok &= in_w if window_active is None else (in_w | ~window_active)
+    s = jnp.where(ok[None, None, None, :], s, NEG)
+    m = jnp.max(s, axis=-1)  # [b,kv,g]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_loc.dtype), v_loc).astype(jnp.float32)
+    return m, l, o
+
+
+def lse_merge(m, l, o, axes):
+    """Merge per-shard (m, l, o~) across mesh axes — the reduce step."""
+    m_g = jax.lax.pmax(m, axes)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axes)
+    o_g = jax.lax.psum(o * corr[..., None], axes)
+    return o_g / jnp.maximum(l_g[..., None], 1e-30)
+
+
+def decode_attend_seqsharded(
+    mesh: Mesh,
+    *,
+    seq_axes: tuple[str, ...],
+    batch_spec,
+    window: int | None = None,
+    cap: float | None = None,
+):
+    """Build a shard_map'd decode attention over a sequence-sharded cache.
+
+    The cache is **read-only** here (positions < t); the new token's (kn, vn)
+    enter as a separate mergeable term folded in after the cross-shard LSE
+    reduce — so the serve scan never rewrites the cache per layer (which on
+    the dry-run host materialized 14 unaliased copies of it; the single
+    in-place update happens once, outside the layer scan).
+
+    Returns ``fn(q [B,H,hd], kn [B,KV,hd], vn [B,KV,hd],
+    k_cache [B,S,KV,hd], v_cache, t, window_active) -> [B,H,hd] (fp32)``.
+    """
+
+    def local(q, kn, vn, k_loc, v_loc, t, window_active):
+        s_loc = k_loc.shape[1]
+        idx = 0
+        for a in seq_axes:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        pos_loc = idx * s_loc + jnp.arange(s_loc)
+        # cache term: strictly pos < t (position t lives in kn/vn)
+        m, l, o = _partial_attend(
+            q, k_loc, v_loc, pos_loc, t,
+            window=window, window_active=window_active, cap=cap,
+            pos_limit=t - 1,
+        )
+        m_g = jax.lax.pmax(m, seq_axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, seq_axes)
+        o_g = jax.lax.psum(o * corr[..., None], seq_axes)
+        # new-token term (self-attention to position t, always in-window)
+        b, h, hd = q.shape
+        kv = kn.shape[1]
+        g = h // kv
+        s_new = jnp.einsum(
+            "bkgd,bkd->bkg", q.reshape(b, kv, g, hd), kn,
+            preferred_element_type=jnp.float32,
+        ) * (hd**-0.5)
+        s_new = softcap(s_new, cap)
+        m_f = jnp.maximum(m_g, s_new)
+        w_c = jnp.exp(m_g - m_f)
+        w_n = jnp.exp(s_new - m_f)
+        num = o_g * w_c[..., None] + vn[:, :, None].astype(jnp.float32) * w_n[..., None]
+        den = l_g * w_c + w_n
+        out = num / jnp.maximum(den[..., None], 1e-30)
+        return out.reshape(b, kv * g, hd)
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(batch_spec),  # q [B,H,hd]
+            P(batch_spec),  # kn [B,KV,hd]
+            P(batch_spec),  # vn
+            P(batch_spec, seq_axes),  # k cache [B,S,KV,hd]
+            P(batch_spec, seq_axes),  # v cache
+            P(),
+            P(),
+        ),
+        out_specs=P(batch_spec),
+        check_rep=False,
+    )

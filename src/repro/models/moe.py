@@ -1,0 +1,226 @@
+"""Mixture-of-Experts FFN: expert-parallel shard_map with capacity dispatch.
+
+Design (DESIGN §5): activations arrive **data-sharded, tp-replicated**, so
+every model shard sees the full local token set and can gather the tokens
+routed to *its* experts directly — dispatch needs **no all_to_all**; the only
+communication is one ``psum`` of partial outputs over the ``tp`` axis (same
+volume as a row-parallel dense FFN), plus the expert-weight strategy below.
+Routing: top-k with renormalization, capacity ``C = round8(T_loc·k/E·cf)``
+(static shapes), position-in-expert by stable sort (memory O(T·k), never
+O(T·E·C)). Dispatch is gather-only (int scatter builds slot→token map).
+
+Expert weights that don't fit tp-sharded (dbrx: 254 GB) are additionally
+sharded over ``dp`` on the ``d_ff`` dim:
+
+* ``mode="train"`` — tokens differ per dp shard, so weights are all-gathered
+  just-in-time per layer (ZeRO-3; autodiff transposes the gather to the
+  reduce-scatter of expert grads).
+* ``mode="replicated"`` — decode with batch too small to dp-shard: tokens are
+  dp-replicated, so instead of gathering weights we run **tensor parallelism
+  over d_ff on the dp axis** (partial down-proj + psum) — no weight movement
+  at all.
+
+The router's top-k + "keep what fits, reconcile later" is the same mergeable
+top-k idea as the MIREX combiner — both are "score, keep k, merge".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models.common import activation_fn
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def router_topk(logits: jax.Array, k: int):
+    """Softmax → top-k → renormalize. logits [T, E] → (weights, ids) [T, k]."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ids = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return probs, w, ids.astype(jnp.int32)
+
+
+def load_balance_loss(probs: jax.Array, ids: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e (over the local token set)."""
+    f = jnp.mean(
+        jax.nn.one_hot(ids, n_experts, dtype=jnp.float32).sum(1), axis=0
+    ) / ids.shape[-1]
+    p = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+def _positions_in_expert(flat_ids: jax.Array) -> jax.Array:
+    """Rank of each assignment within its expert group (stable-sort based)."""
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    group_start = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+    rank_sorted = jnp.arange(flat_ids.shape[0], dtype=jnp.int32) - group_start.astype(
+        jnp.int32
+    )
+    return jnp.zeros_like(flat_ids).at[order].set(rank_sorted)
+
+
+def _dispatch(x, flat_ids, pos, e0, e_loc, capacity, top_k):
+    """Gather-only dispatch: x [T,D] -> h [E_loc, C, D] + slot map."""
+    t, d = x.shape
+    local = (flat_ids >= e0) & (flat_ids < e0 + e_loc)
+    keep = local & (pos < capacity)
+    slot = jnp.where(keep, (flat_ids - e0) * capacity + pos, e_loc * capacity)
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    src = jnp.full((e_loc * capacity + 1,), t, jnp.int32).at[slot].set(token_of)
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])
+    h = x_pad[src[:-1]].reshape(e_loc, capacity, d)
+    return h, slot, keep
+
+
+def moe_ffn_local(
+    x: jax.Array,  # [T_loc, D] — this shard's tokens (tp-replicated)
+    router_w: jax.Array,  # [D, E]
+    w_gate: jax.Array,  # [E_loc, D, F or F_loc]
+    w_up: jax.Array,
+    w_down: jax.Array,  # [E_loc, F or F_loc, D]
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity: int,
+    tp_axis: str,
+    out_psum_axes,
+    activation: str = "silu",
+):
+    """Per-shard MoE body. Returns (y_local, aux_loss)."""
+    t, d = x.shape
+    e_loc = w_gate.shape[0]
+    e0 = jax.lax.axis_index(tp_axis) * e_loc
+    act = activation_fn(activation)
+
+    # bf16 inputs, f32 accumulation: avoids materializing a f32 copy of x
+    logits = jnp.einsum(
+        "td,de->te", x, router_w.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+    probs, weights, ids = router_topk(logits, top_k)
+    aux = load_balance_loss(probs, ids, n_experts)
+
+    flat_ids = ids.reshape(-1)
+    flat_w = weights.reshape(-1)
+    pos = _positions_in_expert(flat_ids)
+    h, slot, keep = _dispatch(x, flat_ids, pos, e0, e_loc, capacity, top_k)
+
+    # bf16 grouped GEMMs (f32 outputs would materialize [E,C,F] f32 buffers)
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    y = jnp.einsum("ecf,efd->ecd", (act(g) * u).astype(x.dtype), w_down).astype(x.dtype)
+
+    # combine: per-k gather+weight keeps the intermediate at [T, D]
+    y_flat = jnp.concatenate([y.reshape(e_loc * capacity, d), jnp.zeros((1, d), y.dtype)])
+    slot_k = slot.reshape(t, top_k)
+    w_k = (flat_w * keep).astype(y.dtype).reshape(t, top_k)
+    out = jnp.zeros((t, d), x.dtype)
+    for j in range(top_k):
+        out = out + y_flat[slot_k[:, j]] * w_k[:, j : j + 1]
+    if out_psum_axes is not None:
+        out = jax.lax.psum(out, out_psum_axes)
+    return out, aux
+
+
+def make_moe_layer(
+    mesh: Mesh,
+    dp_axes: tuple[str, ...],
+    tp_axis: str,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float,
+    tokens_per_shard: int,
+    activation: str = "silu",
+    fsdp_experts: bool = False,
+    mode: str = "train",  # "train" | "replicated"
+):
+    """Build the shard_map'd MoE FFN: (x, router, gate, up, down) ->
+    (y, aux scalar).
+
+    Modes:
+      * ``seq``        — train path. x arrives **sequence-sharded over tp**
+        (``[B_loc, S/tp, D]`` locally): the shard_map boundary then matches
+        the Megatron-SP layer carry, so shard_map-AD's saved input stack is
+        tp-fraction-sized (shard_map residuals ignore the outer remat
+        policy — measured 2.4× activation-stack blowup when the input was
+        tp-replicated). Inside: all-gather S → route/dispatch/compute →
+        **reduce-scatter** partial outputs back to S-sharded.
+      * ``train``      — x dp-sharded, tp-replicated (used when S doesn't
+        divide tp); output psum over tp.
+      * ``replicated`` — decode with batch too small to dp-shard; under
+        ``fsdp_experts`` runs TP-over-d_ff on the dp axes (no weight
+        gather), output psum over (dp, tp).
+    """
+    assert mode in ("train", "seq", "replicated"), mode
+    capacity = _round_up(
+        max(int(tokens_per_shard * top_k / n_experts * capacity_factor), 8), 8
+    )
+    dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    if mode == "seq":
+        x_spec = P(dp_spec, tp_axis, None)
+    elif mode == "train":
+        x_spec = P(dp_spec, None, None)
+    else:
+        x_spec = P(None, None, None)
+
+    def local(x, router_w, w_gate, w_up, w_down):
+        out_axes = tp_axis
+        if fsdp_experts:
+            if mode in ("train", "seq"):
+                # ZeRO-3: gather F-sharded expert weights just-in-time
+                w_gate = jax.lax.all_gather(w_gate, dp_axes, axis=2, tiled=True)
+                w_up = jax.lax.all_gather(w_up, dp_axes, axis=2, tiled=True)
+                w_down = jax.lax.all_gather(w_down, dp_axes, axis=1, tiled=True)
+            else:
+                # replicated tokens: TP over d_ff on the dp axes — partial
+                # down-proj summed in the same psum as the tp reduction.
+                out_axes = (*dp_axes, tp_axis)
+        if mode == "seq":
+            x = jax.lax.all_gather(x, tp_axis, axis=1, tiled=True)
+        b, s, d = x.shape
+
+        def ffn(x2d):
+            return moe_ffn_local(
+                x2d,
+                router_w,
+                w_gate,
+                w_up,
+                w_down,
+                n_experts=n_experts,
+                top_k=top_k,
+                capacity=capacity,
+                tp_axis=tp_axis,
+                out_psum_axes=None if mode == "seq" else out_axes,
+                activation=activation,
+            )
+
+        # checkpoint *inside* the shard_map: shard_map residuals don't obey
+        # the outer layer-level remat policy, so force recompute here.
+        ffn = jax.checkpoint(
+            ffn, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+        )
+        y, aux = ffn(x.reshape(b * s, d))
+        y = y.reshape(b, s, d)
+        if mode == "seq":
+            # partial expert outputs: reduce-scatter back to S-sharded
+            y = jax.lax.psum_scatter(y, tp_axis, scatter_dimension=1, tiled=True)
+        if mode in ("train", "seq"):
+            aux = jax.lax.pmean(aux, dp_axes)
+        return y, aux
+
+    gate_spec = P(tp_axis, None, dp_spec) if fsdp_experts else P(tp_axis, None, None)
+    down_spec = P(tp_axis, dp_spec, None) if fsdp_experts else P(tp_axis, None, None)
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(x_spec, P(), gate_spec, gate_spec, down_spec),
+        out_specs=(x_spec, P()),
+        check_rep=False,
+    )

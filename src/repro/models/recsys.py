@@ -1,0 +1,282 @@
+"""RecSys models: DCN-v2, FM, MIND, SASRec — sparse tables + interactions.
+
+The hot path is the embedding lookup (``models/embedding.py``); interactions:
+
+* **FM** — pairwise ⟨vᵢ,vⱼ⟩xᵢxⱼ via the O(nk) sum-square trick [Rendle'10].
+* **DCN-v2** — cross layers ``x_{l+1} = x₀ ⊙ (W xₗ + b) + xₗ`` then MLP
+  [arXiv:2008.13535] (stacked form).
+* **MIND** — multi-interest capsule routing (B2I dynamic routing)
+  [arXiv:1904.08030]; serving scores a candidate with max over interests.
+* **SASRec** — causal self-attention over the item history [arXiv:1808.09781].
+
+``retrieval_cand`` (score one user against 10⁶ candidates) is the MIREX scan
+verbatim: candidates are the corpus, the model's user representation is the
+query, the per-variant ``score_block`` plugs into ``core/scan.py`` and the
+distributed top-k combiner does the rest. For FM the candidate score is
+*linear* in the candidate embedding, so retrieval reduces exactly to the
+dense dot-product scan (DESIGN §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.distributed.sharding import AxisRules
+from repro.models.common import init_dense
+from repro.models.embedding import embedding_bag, field_embed
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: RecsysConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+
+    def s(*shape):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    d = cfg.embed_dim
+    if cfg.variant == "fm":
+        return {
+            "tables": s(cfg.n_sparse, cfg.vocab_per_field, d),
+            "linear": s(cfg.n_sparse, cfg.vocab_per_field),
+            "bias": s(),
+        }
+    if cfg.variant == "dcn-v2":
+        x0 = cfg.n_dense + cfg.n_sparse * d
+        p = {
+            "tables": s(cfg.n_sparse, cfg.vocab_per_field, d),
+            "cross_w": s(cfg.n_cross_layers, x0, x0),
+            "cross_b": s(cfg.n_cross_layers, x0),
+        }
+        dims = (x0, *cfg.mlp_dims)
+        for i in range(len(cfg.mlp_dims)):
+            p[f"mlp_w{i}"] = s(dims[i], dims[i + 1])
+            p[f"mlp_b{i}"] = s(dims[i + 1])
+        p["head_w"] = s(dims[-1], 1)
+        p["head_b"] = s(1)
+        return p
+    if cfg.variant == "mind":
+        return {
+            "items": s(cfg.n_items, d),
+            "bilinear": s(d, d),  # B2I routing map
+            "out_w": s(d, d),
+            "out_b": s(d),
+        }
+    if cfg.variant == "sasrec":
+        hd = d
+        return {
+            "items": s(cfg.n_items, d),
+            "pos": s(cfg.seq_len, d),
+            "blocks": {
+                "ln1": s(cfg.n_blocks, d),
+                "wq": s(cfg.n_blocks, d, hd),
+                "wk": s(cfg.n_blocks, d, hd),
+                "wv": s(cfg.n_blocks, d, hd),
+                "wo": s(cfg.n_blocks, hd, d),
+                "ln2": s(cfg.n_blocks, d),
+                "w1": s(cfg.n_blocks, d, 4 * d),
+                "b1": s(cfg.n_blocks, 4 * d),
+                "w2": s(cfg.n_blocks, 4 * d, d),
+                "b2": s(cfg.n_blocks, d),
+            },
+            "ln_f": s(d),
+        }
+    raise ValueError(cfg.variant)
+
+
+def init_params(cfg: RecsysConfig, key: jax.Array) -> dict:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes)
+    keys = jax.random.split(key, len(flat))
+    leaves = [
+        init_dense(k, sds.shape, sds.dtype, scale=0.05)
+        if sds.ndim >= 2
+        else jnp.zeros(sds.shape, sds.dtype)
+        for k, sds in zip(keys, flat)
+    ]
+    params = jax.tree.unflatten(treedef, leaves)
+    if cfg.variant == "sasrec":
+        for n in ("ln1", "ln2"):
+            params["blocks"][n] = jnp.ones_like(params["blocks"][n])
+        params["ln_f"] = jnp.ones_like(params["ln_f"])
+    return params
+
+
+def param_specs(cfg: RecsysConfig, rules: AxisRules) -> dict:
+    """Baseline: tables replicated (they fit: ≤1.7 GB); batch over the whole
+    mesh. Vocab-sharded tables are the §Perf alternative (embedding.py)."""
+    return jax.tree.map(
+        lambda s: P(*([None] * s.ndim)),
+        param_shapes(cfg),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+# ---------------------------------------------------------------------------
+# forwards
+# ---------------------------------------------------------------------------
+
+def _rms(x, w):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(v + 1e-6) * w).astype(x.dtype)
+
+
+def fm_forward(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """FM with the sum-square trick: O(F·d) per example. Returns logits [B]."""
+    ids = batch["sparse_ids"]  # [B, F]
+    e = field_embed(params["tables"], ids)  # [B, F, d]
+    f = params["linear"].shape[0]
+    lin = params["linear"][jnp.arange(f)[None, :], ids].sum(-1)  # [B]
+    s1 = e.sum(1)  # [B, d]
+    s2 = (e * e).sum(1)
+    pair = 0.5 * (s1 * s1 - s2).sum(-1)
+    return params["bias"] + lin + pair
+
+
+def dcn_forward(params, batch, cfg: RecsysConfig) -> jax.Array:
+    e = field_embed(params["tables"], batch["sparse_ids"])  # [B, F, d]
+    b = e.shape[0]
+    x0 = jnp.concatenate([batch["dense"], e.reshape(b, -1)], axis=-1)
+    x = x0
+    for i in range(cfg.n_cross_layers):
+        x = x0 * (x @ params["cross_w"][i] + params["cross_b"][i]) + x
+    for i in range(len(cfg.mlp_dims)):
+        x = jax.nn.relu(x @ params[f"mlp_w{i}"] + params[f"mlp_b{i}"])
+    return (x @ params["head_w"] + params["head_b"])[:, 0]
+
+
+def mind_interests(params, history, cfg: RecsysConfig) -> jax.Array:
+    """B2I dynamic routing -> interest capsules [B, n_interests, d]."""
+    mask = history > 0
+    u = embedding_bag(
+        params["items"], history, mode="sum", mask=mask
+    )  # warm start unused; we need per-item embeds:
+    e = params["items"][jnp.clip(history, 0, None)] * mask[..., None]  # [B, L, d]
+    u_hat = e @ params["bilinear"]  # [B, L, d]
+    b_logit = jnp.zeros((*history.shape, cfg.n_interests), jnp.float32)  # [B, L, I]
+
+    def squash(v):
+        n2 = jnp.sum(jnp.square(v), -1, keepdims=True)
+        return v * (n2 / (1.0 + n2)) / jnp.sqrt(n2 + 1e-9)
+
+    caps = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b_logit, axis=-1) * mask[..., None]  # [B, L, I]
+        z = jnp.einsum("bli,bld->bid", w, u_hat)
+        caps = squash(z)  # [B, I, d]
+        b_logit = b_logit + jnp.einsum("bid,bld->bli", caps, u_hat)
+    del u
+    return jax.nn.relu(caps @ params["out_w"] + params["out_b"])
+
+
+def mind_train_logits(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """Label-aware attention over interests vs the target item (training)."""
+    caps = mind_interests(params, batch["history"], cfg)  # [B, I, d]
+    tgt = params["items"][batch["target"][:, -1]]  # [B, d]
+    att = jax.nn.softmax(jnp.einsum("bid,bd->bi", caps, tgt) * 2.0, axis=-1)
+    user = jnp.einsum("bi,bid->bd", att, caps)
+    return user, tgt
+
+
+def sasrec_forward(params, history, cfg: RecsysConfig) -> jax.Array:
+    """history [B, S] -> hidden states [B, S, d] (causal)."""
+    b, s = history.shape
+    d = cfg.embed_dim
+    x = params["items"][jnp.clip(history, 0, None)] + params["pos"][None, :s]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    for i in range(cfg.n_blocks):
+        blk = jax.tree.map(lambda p, i=i: p[i], params["blocks"])
+        y = _rms(x, blk["ln1"])
+        q, k, v = y @ blk["wq"], y @ blk["wk"], y @ blk["wv"]
+        a = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(float(d))
+        a = jnp.where(mask[None], a, -1e30)
+        o = jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(a, -1), v) @ blk["wo"]
+        x = x + o
+        y = _rms(x, blk["ln2"])
+        x = x + jax.nn.relu(y @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+    return _rms(x, params["ln_f"])
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+def bce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def in_batch_softmax_loss(user, items):
+    """user [B,d] vs items [B,d] (positives); in-batch negatives."""
+    logits = user @ items.T / jnp.sqrt(float(user.shape[-1]))
+    labels = jnp.arange(user.shape[0])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], -1))
+
+
+def train_logits(params, batch, cfg: RecsysConfig):
+    if cfg.variant == "fm":
+        return bce_loss(fm_forward(params, batch, cfg), batch["labels"])
+    if cfg.variant == "dcn-v2":
+        return bce_loss(dcn_forward(params, batch, cfg), batch["labels"])
+    if cfg.variant == "mind":
+        user, tgt = mind_train_logits(params, batch, cfg)
+        return in_batch_softmax_loss(user, tgt)
+    if cfg.variant == "sasrec":
+        h = sasrec_forward(params, batch["history"], cfg)
+        pos = params["items"][batch["target"]]
+        neg = params["items"][(batch["target"] + 1_234_567) % cfg.n_items]
+        pos_lg = jnp.einsum("bsd,bsd->bs", h, pos)
+        neg_lg = jnp.einsum("bsd,bsd->bs", h, neg)
+        valid = batch["history"] > 0
+        return bce_loss(
+            jnp.where(valid, pos_lg, 0.0), valid.astype(jnp.float32)
+        ) + bce_loss(jnp.where(valid, neg_lg, 0.0), jnp.zeros_like(neg_lg))
+    raise ValueError(cfg.variant)
+
+
+# ---------------------------------------------------------------------------
+# retrieval: per-variant score_block for the MIREX scan
+# ---------------------------------------------------------------------------
+
+def user_query_vector(params, batch, cfg: RecsysConfig):
+    """Collapse the user side to the representation the scan scores against."""
+    if cfg.variant == "fm":
+        e = field_embed(params["tables"], batch["sparse_ids"])
+        return e.sum(1)  # score(c) = const + lin_c + v_c · Σvᵢ  (linear!)
+    if cfg.variant == "mind":
+        return mind_interests(params, batch["history"], cfg)  # [B, I, d]
+    if cfg.variant == "sasrec":
+        return sasrec_forward(params, batch["history"], cfg)[:, -1]  # [B, d]
+    raise ValueError(f"{cfg.variant} uses full-forward retrieval")
+
+
+def score_block_dot(user_vec, cand_embeds):
+    return jnp.einsum("bd,nd->bn", user_vec, cand_embeds)
+
+
+def score_block_multi_interest(user_caps, cand_embeds):
+    """MIND serving: max over interest capsules [B,I,d] × [N,d] -> [B,N]."""
+    s = jnp.einsum("bid,nd->bin", user_caps, cand_embeds)
+    return s.max(axis=1)
+
+
+def score_block_dcn(params, user_batch, cand_ids, cfg: RecsysConfig):
+    """Honest DCN retrieval: full forward per (user, candidate-block).
+
+    The candidate id replaces the last sparse field; this is the
+    sequential-scan spirit — the 'index-free' model evaluated per candidate.
+    user_batch must have batch size 1 (retrieval_cand).
+    """
+    n = cand_ids.shape[0]
+    dense = jnp.broadcast_to(user_batch["dense"], (n, user_batch["dense"].shape[-1]))
+    ids = jnp.broadcast_to(user_batch["sparse_ids"], (n, user_batch["sparse_ids"].shape[-1]))
+    ids = ids.at[:, -1].set(cand_ids)
+    return dcn_forward(params, {"dense": dense, "sparse_ids": ids}, cfg)[None, :]

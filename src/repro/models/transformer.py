@@ -1,0 +1,584 @@
+"""Decoder-only transformer (dense + MoE) with production sharding.
+
+One model definition serves all five assigned LM architectures (dbrx-132b,
+qwen3-moe-30b-a3b, h2o-danube-1.8b, gemma2-27b, gemma2-2b): GQA, RoPE,
+sliding-window / gemma2 local-global alternation, logit soft-capping, SwiGLU
+or GeGLU FFNs, and top-k MoE (``models/moe.py``). Layers are **stacked and
+scanned** so the compiled HLO is one layer's program — essential both for
+compile time on the 1-core dry-run host and for HLO-size sanity at 512 chips.
+
+Sharding (DESIGN §5): Megatron TP over ``tp`` for attention heads + FFN,
+expert parallelism over ``tp`` for MoE, DP over ``dp`` (pod composes),
+vocab-sharded loss in shard_map, optional ZeRO-3 expert weights. When a
+config's head count does not divide the tp axis (gemma2-2b: 8 heads on a
+16-way axis) attention falls back to dp-only compute with replicated attn
+weights — recorded in the roofline; the FFN stays TP over d_ff.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import TransformerConfig
+from repro.distributed.sharding import AxisRules
+from repro.models import moe as moe_lib
+from repro.models.attention import chunked_attention, decode_attend_seqsharded
+from repro.models.common import apply_rope, init_dense, rms_norm, rope_angles, softcap
+
+FSDP_EXPERT_BYTES = 2**33  # >8 GiB of expert weights -> ZeRO-3 them over dp
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def _dtype(cfg: TransformerConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def uses_fsdp_experts(cfg: TransformerConfig) -> bool:
+    if not cfg.is_moe:
+        return False
+    expert_bytes = 3 * cfg.n_layers * cfg.n_experts * cfg.d_model * cfg.d_ff * 2
+    return expert_bytes > FSDP_EXPERT_BYTES
+
+
+def heads_divisible(cfg: TransformerConfig, tp_size: int) -> bool:
+    return cfg.n_heads % tp_size == 0
+
+
+def param_shapes(cfg: TransformerConfig) -> dict:
+    """Shape/dtype tree (ShapeDtypeStructs) — the dry-run currency."""
+    d, hd, h, kv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    l, f, v = cfg.n_layers, cfg.d_ff, cfg.vocab
+    dt = _dtype(cfg)
+
+    def s(*shape):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    layers: dict[str, Any] = {
+        "attn_norm": s(l, d),
+        "wq": s(l, d, h * hd),
+        "wk": s(l, d, kv * hd),
+        "wv": s(l, d, kv * hd),
+        "wo": s(l, h * hd, d),
+        "ffn_norm": s(l, d),
+    }
+    if cfg.is_moe:
+        layers.update(
+            router=s(l, d, cfg.n_experts),
+            w_gate=s(l, cfg.n_experts, d, f),
+            w_up=s(l, cfg.n_experts, d, f),
+            w_down=s(l, cfg.n_experts, f, d),
+        )
+    else:
+        layers.update(w_gate=s(l, d, f), w_up=s(l, d, f), w_down=s(l, f, d))
+    return {
+        "embed": s(v, d),
+        "layers": layers,
+        "final_norm": s(d),
+        "unembed": s(d, v),
+    }
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> dict:
+    """Real parameter init (smoke tests / the 100M example train)."""
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes)
+    keys = jax.random.split(key, len(flat))
+    leaves = [
+        init_dense(k, sds.shape, sds.dtype, scale=0.02) if sds.ndim >= 2
+        else jnp.ones(sds.shape, sds.dtype)
+        for k, sds in zip(keys, flat)
+    ]
+    params = jax.tree.unflatten(treedef, leaves)
+    if cfg.rms_one_plus:  # gemma (1+w) convention: init scales at 0
+        for name in ("attn_norm", "ffn_norm"):
+            params["layers"][name] = jnp.zeros_like(params["layers"][name])
+        params["final_norm"] = jnp.zeros_like(params["final_norm"])
+    return params
+
+
+def param_specs(cfg: TransformerConfig, rules: AxisRules, tp_size: int) -> dict:
+    """PartitionSpec tree matching param_shapes."""
+    tp = rules.tp
+    dp = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+    attn_tp = heads_divisible(cfg, tp_size)
+    layers = {
+        "attn_norm": P(None, None),
+        "wq": P(None, None, tp) if attn_tp else P(None, None, None),
+        "wk": P(None, None, None),
+        "wv": P(None, None, None),
+        "wo": P(None, tp, None) if attn_tp else P(None, None, None),
+        "ffn_norm": P(None, None),
+    }
+    if cfg.is_moe:
+        fsdp = uses_fsdp_experts(cfg)
+        layers.update(
+            router=P(None, None, None),
+            w_gate=P(None, tp, None, dp) if fsdp else P(None, tp, None, None),
+            w_up=P(None, tp, None, dp) if fsdp else P(None, tp, None, None),
+            w_down=P(None, tp, dp, None) if fsdp else P(None, tp, None, None),
+        )
+    else:
+        layers.update(
+            w_gate=P(None, None, tp), w_up=P(None, None, tp), w_down=P(None, tp, None)
+        )
+    return {
+        "embed": P(None, tp),
+        "layers": layers,
+        "final_norm": P(None),
+        "unembed": P(None, tp),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_windows(cfg: TransformerConfig) -> jax.Array:
+    """Per-layer bool: does layer ℓ apply the sliding window?"""
+    l = cfg.n_layers
+    if cfg.local_global_alternating:
+        return jnp.arange(l) % 2 == 0  # gemma2: even layers local
+    if cfg.sliding_window is not None:
+        return jnp.ones((l,), bool)
+    return jnp.zeros((l,), bool)
+
+
+def _window(cfg: TransformerConfig) -> int:
+    return cfg.sliding_window if cfg.sliding_window is not None else 4096
+
+
+def _dense_ffn(x, w_gate, w_up, w_down, cfg, mesh=None, rules=None):
+    act = {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True)}[
+        cfg.activation
+    ]
+    # bf16 intermediates: dot-internal accumulation is f32 on the MXU; f32
+    # *outputs* here would materialize [B,S,F]/[B,S,D] f32 buffers and double
+    # the row-parallel psum payload.
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    if mesh is not None:
+        # pin Megatron column-parallel: with an S-sharded x the partitioner
+        # otherwise prefers replicating the weights (S-sharded tokens ×
+        # full-F intermediates), which makes every dW full-F and f32
+        # (33×648 MiB on the gemma2-27b dry-run).
+        g = jax.lax.with_sharding_constraint(g, rules.shard(mesh, "dp", None, "tp"))
+        u = jax.lax.with_sharding_constraint(u, rules.shard(mesh, "dp", None, "tp"))
+    return jnp.einsum("bsf,fd->bsd", (act(g) * u).astype(x.dtype), w_down).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelContext:
+    """Everything the forward pass needs besides params + inputs."""
+
+    cfg: TransformerConfig
+    mesh: Mesh
+    rules: AxisRules
+    moe_layer: Any = None
+
+
+def make_context(
+    cfg: TransformerConfig,
+    mesh: Mesh,
+    rules: AxisRules,
+    *,
+    tokens_per_shard: int | None = None,
+    moe_mode: str = "train",
+) -> ModelContext:
+    moe_layer = None
+    if cfg.is_moe and tokens_per_shard is not None:
+        moe_layer = moe_lib.make_moe_layer(
+            mesh,
+            rules.dp,
+            rules.tp,
+            n_experts=cfg.n_experts,
+            top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+            tokens_per_shard=tokens_per_shard,
+            activation=cfg.activation,
+            fsdp_experts=uses_fsdp_experts(cfg),
+            mode=moe_mode,
+        )
+    return ModelContext(cfg=cfg, mesh=mesh, rules=rules, moe_layer=moe_layer)
+
+
+def _attn_block(x, lp, cfg, *, window_active, q_offset=0, kv_out: bool = False,
+                mesh=None, rules=None, attn_tp=False, seq_spec=None):
+    """Norm → QKV → RoPE → chunked attention → out-proj. x [B,S,D]."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    y = rms_norm(x, lp["attn_norm"], one_plus=cfg.rms_one_plus)
+    if mesh is not None and seq_spec is not None:
+        # keep the norm S-sharded: otherwise the partitioner gathers x first
+        # and the f32 norm internals balloon to full-seq [B,S,D] buffers
+        # (52×1.15 GiB on gemma2-27b); the gather then happens on bf16 y.
+        y = jax.lax.with_sharding_constraint(y, rules.shard(mesh, *seq_spec))
+    q = jnp.einsum("bsd,dh->bsh", y, lp["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dh->bsh", y, lp["wk"]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,dh->bsh", y, lp["wv"]).reshape(b, s, kv, hd)
+    if attn_tp and mesh is not None:
+        # pin head-TP (full tokens × local heads); see _dense_ffn note
+        q = jax.lax.with_sharding_constraint(q, rules.shard(mesh, "dp", None, "tp", None))
+    pos = q_offset + jnp.arange(s)
+    cos, sin = rope_angles(pos, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k_exp = jnp.repeat(k, h // kv, axis=2)
+    v_exp = jnp.repeat(v, h // kv, axis=2)
+    o = chunked_attention(
+        q,
+        k_exp,
+        v_exp,
+        q_block=min(cfg.q_block, s),
+        causal=True,
+        window=_window(cfg),
+        window_active=window_active,
+        cap=cfg.attn_softcap,
+    )
+    # bf16 output: the tp partial-sum (and its psum) stays bf16 — f32 here
+    # materializes a full [B,S,D] f32 buffer per layer instance and doubles
+    # the all-reduce payload.
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, h * hd), lp["wo"]).astype(x.dtype)
+    if kv_out:
+        return o, (k, v)
+    return o
+
+
+def forward_hidden(params: dict, tokens: jax.Array, ctx: ModelContext):
+    """tokens [B,S] → (hidden x [B,S,D] after final norm, moe aux).
+
+    The unembed projection is *not* applied here — training fuses it into the
+    chunked cross-entropy (the [B,S,V] logits tensor never exists), serving
+    applies it to last positions only.
+    """
+    cfg, mesh, rules = ctx.cfg, ctx.mesh, ctx.rules
+    dt = _dtype(cfg)
+    x = params["embed"][tokens].astype(dt)  # table is D-sharded; gather local
+    # pin the gather output to the table's D-sharding: the backward scatter
+    # then stays tp-sharded instead of materializing a replicated f32 [V,D]
+    # gradient (5×2.5 GiB on the dbrx dry-run). Skipped under grad
+    # accumulation: the constraint inside the microbatch scan trips an XLA
+    # SPMD partitioner verifier bug (invalid dynamic-slice after
+    # partitioning); the f32 accumulator tree carries the sharding instead.
+    if cfg.grad_accum == 1:
+        x = jax.lax.with_sharding_constraint(x, rules.shard(mesh, "dp", None, "tp"))
+    if cfg.rms_one_plus:
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    windows = _layer_windows(cfg)
+
+    # Sequence parallelism (Megatron-SP): the layer-boundary carry — and with
+    # it the remat residual stack [L,B,S,D] — is sharded over ``tp`` on the
+    # sequence dim (16× smaller stack). The partitioner turns the layer-entry
+    # resharding into an all-gather and the exit into a reduce-scatter, which
+    # together replace the plain TP all-reduce. The MoE shard_map's in_specs
+    # (tp-replicated x) trigger the gather automatically for MoE layers.
+    # The carry itself is f32: XLA:CPU float-normalization turns a bf16
+    # dynamic-update-slice into convert→f32-DUS→convert, which materializes
+    # several unaliasable copies of the residual stack on the dry-run host;
+    # a f32 stack is DUS'd natively and aliases in place. (buffer-assignment
+    # dump, dbrx train_4k).
+    seq_par = tokens.shape[1] % mesh.shape[rules.tp] == 0
+    attn_tp = heads_divisible(cfg, mesh.shape[rules.tp])
+    carry_spec = ("dp", "tp", None) if seq_par else ("dp", None, None)
+    x = jax.lax.with_sharding_constraint(x, rules.shard(mesh, *carry_spec))
+
+    def layer(carry, xs):
+        x32, aux = carry
+        x = x32.astype(dt)
+        lp, window_active = xs
+        # barrier: XLA:CPU float-normalizes bf16 dot operands to f32 and
+        # hoists the conversion of loop-invariant weight stacks out of the
+        # while loop (full f32 copies of every stacked weight — 5.6 GiB on
+        # gemma2-27b). The barrier keeps the convert per-slice. No-op on TPU.
+        lp = jax.lax.optimization_barrier(lp)
+        x = x + _attn_block(x, lp, cfg, window_active=window_active,
+                            mesh=mesh, rules=rules, attn_tp=attn_tp,
+                            seq_spec=carry_spec)
+        # back to S-sharded before the FFN: the MoE shard_map consumes the
+        # S-sharded layout directly, the dense FFN gathers what it needs.
+        x = jax.lax.with_sharding_constraint(x, rules.shard(mesh, *carry_spec))
+        y = rms_norm(x, lp["ffn_norm"], one_plus=cfg.rms_one_plus)
+        if cfg.is_moe:
+            f, aux_l = ctx.moe_layer(y, lp["router"], lp["w_gate"], lp["w_up"], lp["w_down"])
+            aux = aux + aux_l
+        else:
+            f = _dense_ffn(y, lp["w_gate"], lp["w_up"], lp["w_down"], cfg,
+                           mesh=mesh, rules=rules)
+        x = x + f
+        x = jax.lax.with_sharding_constraint(x, rules.shard(mesh, *carry_spec))
+        return (x.astype(jnp.float32), aux), None
+
+    policy = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[cfg.remat_policy]
+    carry0 = (x.astype(jnp.float32), jnp.zeros((), jnp.float32))
+    xs = (params["layers"], windows)
+    ck = cfg.remat_chunk if cfg.n_layers % max(cfg.remat_chunk, 1) == 0 else 1
+    if cfg.remat and ck > 1:
+        # two-level checkpointing: the outer scan saves one carry per CHUNK
+        # of ck layers (residual stack ÷ ck); the chunk forward — including
+        # the per-layer carries and the MoE shard_map residuals — is
+        # recomputed during that chunk's backward. ~1 extra forward of
+        # compute for a ck× smaller activation stack.
+        nck = cfg.n_layers // ck
+        xs_c = jax.tree.map(lambda p: p.reshape(nck, ck, *p.shape[1:]), xs)
+
+        def chunk_body(carry, xs_chunk):
+            carry, _ = jax.lax.scan(
+                jax.checkpoint(layer, policy=policy, prevent_cse=False),
+                carry,
+                xs_chunk,
+            )
+            return carry, None
+
+        (x, aux), _ = jax.lax.scan(
+            jax.checkpoint(
+                chunk_body,
+                policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False,
+            ),
+            carry0,
+            xs_c,
+        )
+    else:
+        body = layer
+        if cfg.remat:
+            body = jax.checkpoint(layer, policy=policy, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, carry0, xs)
+    x = rms_norm(x.astype(dt), params["final_norm"], one_plus=cfg.rms_one_plus)
+    return x, aux
+
+
+def apply_unembed(params: dict, x: jax.Array, cfg: TransformerConfig):
+    logits = jnp.einsum(
+        "...d,dv->...v", x, params["unembed"], preferred_element_type=jnp.float32
+    )
+    return softcap(logits, cfg.final_softcap)
+
+
+def forward(params: dict, tokens: jax.Array, ctx: ModelContext):
+    """Full logits (tests / small models only — [B,S,V] materializes)."""
+    x, aux = forward_hidden(params, tokens, ctx)
+    return apply_unembed(params, x, ctx.cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# loss: fused, chunked, vocab-parallel cross-entropy in shard_map
+# (the [B,S,V] logits tensor never exists; per-chunk recompute in backward)
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(ctx: ModelContext, aux_weight: float = 0.01, chunk: int = 256):
+    cfg, mesh, rules = ctx.cfg, ctx.mesh, ctx.rules
+    tp = rules.tp
+    dp = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+    v_loc = cfg.vocab // mesh.shape[tp]
+
+    def local_xent(x, unembed_loc, labels):
+        """x [B_loc, S, D] (tp-replicated), unembed_loc [D, V_loc],
+        labels [B_loc, S] -> mean xent (replicated scalar)."""
+        b, s, d = x.shape
+        ck = min(chunk, s)
+        nc = s // ck
+        v0 = jax.lax.axis_index(tp) * v_loc
+        xc = jnp.moveaxis(x.reshape(b, nc, ck, d), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, nc, ck), 1, 0)
+
+        def one_chunk(total, xs):
+            xck, lck = xs  # [B, ck, D], [B, ck]
+            logits = jnp.einsum(
+                "bcd,dv->bcv", xck, unembed_loc, preferred_element_type=jnp.float32
+            )
+            logits = softcap(logits, cfg.final_softcap)
+            m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+            m_g = jax.lax.pmax(m, tp)  # shift only; exact under stop_gradient
+            se = jnp.sum(jnp.exp(logits - m_g[..., None]), axis=-1)
+            lse = jnp.log(jax.lax.psum(se, tp)) + m_g
+            lab = lck - v0
+            in_range = (lab >= 0) & (lab < v_loc)
+            lab_logit = jnp.take_along_axis(
+                logits, jnp.clip(lab, 0, v_loc - 1)[..., None], axis=-1
+            )[..., 0]
+            lab_logit = jax.lax.psum(jnp.where(in_range, lab_logit, 0.0), tp)
+            return total + jnp.sum(lse - lab_logit), None
+
+        body = jax.checkpoint(
+            one_chunk, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+        )
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+        return jax.lax.pmean(total / (b * s), dp)
+
+    xent = shard_map(
+        local_xent,
+        mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, tp), P(dp, None)),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+    def loss_fn(params, batch):
+        x, aux = forward_hidden(params, batch["tokens"], ctx)
+        loss = xent(x, params["unembed"], batch["labels"])
+        return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# decode: cache shapes / specs, prefill_step, serve_step
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    dt = _dtype(cfg)
+    shp = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(shp, dt), "v": jax.ShapeDtypeStruct(shp, dt)}
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_shapes(cfg, batch, max_len)
+    )
+
+
+def decode_layout(cfg: TransformerConfig, rules: AxisRules, batch: int):
+    """(seq_axes, batch_spec): batch=1 shards the sequence over *all* axes."""
+    if batch == 1:
+        return (*rules.dp, rules.tp), None
+    return (rules.tp,), rules.dp if len(rules.dp) > 1 else rules.dp[0]
+
+
+def cache_specs(cfg: TransformerConfig, rules: AxisRules, batch: int) -> dict:
+    seq_axes, batch_spec = decode_layout(cfg, rules, batch)
+    spec = P(None, batch_spec, seq_axes, None, None)
+    return {"k": spec, "v": spec}
+
+
+def make_serve_step(ctx: ModelContext, *, batch: int):
+    """One-token decode over a sequence-sharded KV cache (MIREX-as-attention).
+
+    serve_step(params, cache, tokens [B], t) -> (logits [B,V], cache')
+    """
+    cfg, mesh, rules = ctx.cfg, ctx.mesh, ctx.rules
+    seq_axes, batch_spec = decode_layout(cfg, rules, batch)
+    windows = _layer_windows(cfg)
+    dt = _dtype(cfg)
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    attend = decode_attend_seqsharded(
+        mesh,
+        seq_axes=seq_axes,
+        batch_spec=batch_spec,
+        window=_window(cfg),
+        cap=cfg.attn_softcap,
+    )
+
+    def serve_step(params, cache, tokens, t):
+        b = tokens.shape[0]
+        x = params["embed"][tokens].astype(dt)  # [B, D]
+        if cfg.rms_one_plus:
+            x = x * jnp.asarray(cfg.d_model**0.5, dt)
+        cos, sin = rope_angles(t[None], hd, cfg.rope_theta)
+
+        def layer(x, xs):
+            lp, window_active, k_cache, v_cache = xs
+            # see forward_hidden: block hoisted f32 copies of weights+cache
+            lp, k_cache, v_cache = jax.lax.optimization_barrier((lp, k_cache, v_cache))
+            y = rms_norm(x, lp["attn_norm"], one_plus=cfg.rms_one_plus)
+            q = jnp.einsum("bd,dh->bh", y, lp["wq"]).reshape(b, h, hd)
+            kn = jnp.einsum("bd,dh->bh", y, lp["wk"]).reshape(b, kv, hd)
+            vn = jnp.einsum("bd,dh->bh", y, lp["wv"]).reshape(b, kv, hd)
+            q = apply_rope(q[:, None], cos, sin)[:, 0]
+            kn = apply_rope(kn[:, None], cos, sin)[:, 0]
+            # the cache is read-only inside the scan; kn/vn are folded into
+            # the attention as a separate merge term and written once below
+            o = attend(q, kn, vn, k_cache, v_cache, t, window_active).astype(dt)
+            o = jnp.einsum("bh,hd->bd", o.reshape(b, h * hd), lp["wo"]).astype(dt)
+            x = x + o
+            y2 = rms_norm(x, lp["ffn_norm"], one_plus=cfg.rms_one_plus)
+            if cfg.is_moe:
+                f, _ = ctx.moe_layer(
+                    y2[:, None], lp["router"], lp["w_gate"], lp["w_up"], lp["w_down"]
+                )
+                f = f[:, 0]
+            else:
+                f = _dense_ffn(y2[:, None], lp["w_gate"], lp["w_up"], lp["w_down"], cfg)[:, 0]
+            return x + f, (kn.astype(cache["k"].dtype), vn.astype(cache["v"].dtype))
+
+        x, (k_new, v_new) = jax.lax.scan(
+            layer, x, (params["layers"], windows, cache["k"], cache["v"])
+        )
+        # single in-place cache write for all layers (donated buffer aliases)
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new[:, :, None], (0, 0, t, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new[:, :, None], (0, 0, t, 0, 0)
+        )
+        x = rms_norm(x, params["final_norm"], one_plus=cfg.rms_one_plus)
+        logits = jnp.einsum(
+            "bd,dv->bv", x, params["unembed"], preferred_element_type=jnp.float32
+        )
+        return softcap(logits, cfg.final_softcap), {"k": k_cache, "v": v_cache}
+
+    return serve_step
+
+
+def make_prefill_step(ctx: ModelContext):
+    """Process a full prompt: last-position logits + the filled KV cache."""
+    cfg, mesh, rules = ctx.cfg, ctx.mesh, ctx.rules
+    dt = _dtype(cfg)
+
+    def prefill(params, tokens):
+        x = params["embed"][tokens].astype(dt)
+        seq_par = tokens.shape[1] % mesh.shape[rules.tp] == 0
+        attn_tp = heads_divisible(cfg, mesh.shape[rules.tp])
+        carry_spec = ("dp", "tp", None) if seq_par else ("dp", None, None)
+        # emitted KV cache: batch over dp, sequence over tp (decode layout)
+        kv_spec = ("dp", "tp", None, None) if seq_par else ("dp", None, None, None)
+        x = jax.lax.with_sharding_constraint(x, rules.shard(mesh, *carry_spec))
+        if cfg.rms_one_plus:
+            x = x * jnp.asarray(cfg.d_model**0.5, dt)
+        windows = _layer_windows(cfg)
+
+        def layer(x, xs):
+            lp, window_active = xs
+            lp = jax.lax.optimization_barrier(lp)  # see forward_hidden
+            o, (k, v) = _attn_block(x, lp, cfg, window_active=window_active, kv_out=True,
+                                    mesh=mesh, rules=rules, attn_tp=attn_tp,
+                                    seq_spec=carry_spec)
+            k = jax.lax.with_sharding_constraint(k, rules.shard(mesh, *kv_spec))
+            v = jax.lax.with_sharding_constraint(v, rules.shard(mesh, *kv_spec))
+            x = x + o
+            x = jax.lax.with_sharding_constraint(x, rules.shard(mesh, *carry_spec))
+            y = rms_norm(x, lp["ffn_norm"], one_plus=cfg.rms_one_plus)
+            if cfg.is_moe:
+                f, _ = ctx.moe_layer(y, lp["router"], lp["w_gate"], lp["w_up"], lp["w_down"])
+            else:
+                f = _dense_ffn(y, lp["w_gate"], lp["w_up"], lp["w_down"], cfg,
+                               mesh=mesh, rules=rules)
+            x = x + f
+            x = jax.lax.with_sharding_constraint(x, rules.shard(mesh, *carry_spec))
+            return x, (k, v)
+
+        body = layer
+        if cfg.remat:
+            body = jax.checkpoint(
+                layer, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+            )
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], windows))
+        x = rms_norm(x, params["final_norm"], one_plus=cfg.rms_one_plus)
+        logits = jnp.einsum(
+            "bd,dv->bv", x[:, -1], params["unembed"], preferred_element_type=jnp.float32
+        )
+        return softcap(logits, cfg.final_softcap), {"k": ks, "v": vs}
+
+    return prefill

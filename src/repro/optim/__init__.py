@@ -1,0 +1,12 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm, cosine_schedule, opt_state_specs
+from repro.optim import compress
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "opt_state_specs",
+    "compress",
+]

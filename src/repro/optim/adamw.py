@@ -1,0 +1,129 @@
+"""AdamW + schedule + clipping, with ZeRO-1-style state sharding.
+
+Optimizer moments are fp32 regardless of parameter dtype. ``opt_state_specs``
+derives the moment shardings from the parameter shardings and *additionally*
+shards any dp-replicated moment over the dp axes on its first divisible dim
+(ZeRO-1): at 512 chips the moments of a replicated 2.6 B-param model drop from
+21 GB/chip to <100 MB/chip. XLA inserts the corresponding reduce-scatter /
+all-gather around the update.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import AxisRules
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    m: dict
+    v: dict
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_state_shapes(param_shapes, moment_dtype=jnp.float32) -> AdamWState:
+    md = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(moment_dtype))
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(md, param_shapes),
+        v=jax.tree.map(md, param_shapes),
+    )
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+            m2.astype(m.dtype),
+            v2.astype(v.dtype),
+        )
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def _zero1_spec(spec: P, shape: tuple, rules: AxisRules, dp_size: int) -> P:
+    """Extra-shard a moment over dp on the first divisible unsharded dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a:
+                used.add(a)
+    if any(a in used for a in rules.dp):
+        return spec  # already dp-sharded somewhere
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dp_size == 0 and dim > 0:
+            entries[i] = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+            return P(*entries)
+    return spec
+
+
+def opt_state_specs(param_specs, param_shapes, rules: AxisRules, dp_size: int, *, zero1: bool = True):
+    """Moment shardings = param shardings (+ ZeRO-1 dp sharding)."""
+    if zero1:
+        mspec = jax.tree.map(
+            lambda sp, sh: _zero1_spec(sp, sh.shape, rules, dp_size),
+            param_specs,
+            param_shapes,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    else:
+        mspec = param_specs
+    return AdamWState(step=P(), m=mspec, v=mspec)

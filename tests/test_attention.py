@@ -1,0 +1,98 @@
+"""Chunked attention vs full reference; traced window toggling; pipeline
+fold properties; optimizer behaviour."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pipeline
+from repro.kernels import ref as kref
+from repro.models.attention import chunked_attention
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim import compress
+
+
+@pytest.mark.parametrize("window,cap", [(None, None), (16, None), (16, 50.0)])
+@pytest.mark.parametrize("q_block", [16, 64])
+def test_chunked_attention_matches_reference(rng, window, cap, q_block):
+    b, s, h, kv, hd = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, hd)), jnp.float32)
+    k_exp = jnp.repeat(k, h // kv, axis=2)
+    v_exp = jnp.repeat(v, h // kv, axis=2)
+    out = chunked_attention(
+        q, k_exp, v_exp, q_block=q_block, causal=True, window=window, cap=cap
+    )
+    want = kref.flash_attention_ref(q, k, v, causal=True, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-4, atol=3e-5)
+
+
+def test_traced_window_active_toggles(rng):
+    """window_active as a traced bool: True == windowed, False == full."""
+    b, s, h, hd = 1, 32, 2, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    f = jax.jit(
+        lambda active: chunked_attention(
+            q, k, v, q_block=8, window=4, window_active=active
+        )
+    )
+    on = f(jnp.asarray(True))
+    off = f(jnp.asarray(False))
+    with_window = chunked_attention(q, k, v, q_block=8, window=4, window_active=None)
+    without = chunked_attention(q, k, v, q_block=8, window=None)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(with_window), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(off), np.asarray(without), rtol=1e-6)
+    assert not np.allclose(np.asarray(on), np.asarray(off))
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_fold_chunks_equals_direct_sum(n_chunk_pow, seed):
+    r = np.random.default_rng(seed)
+    chunk = 2**n_chunk_pow
+    n = chunk * int(r.integers(1, 6))
+    xs = jnp.asarray(r.standard_normal((n, 3)), jnp.float32)
+    out = pipeline.fold_chunks(
+        xs, chunk, lambda s, c, i: s + c.sum(0), jnp.zeros((3,), jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(xs.sum(0)), rtol=1e-4, atol=1e-4)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, lr=0.05, weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    total = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_error_feedback_residual_identity(rng):
+    """EF invariant: transmitted + residual == accumulated gradient."""
+    g = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    acc = g  # first step: residual 0
+    vals, idx = compress._topk_compress_leaf(acc, 0.1)
+    sparse = compress._topk_decompress_leaf(vals, idx, acc.shape)
+    residual = acc - sparse
+    np.testing.assert_allclose(np.asarray(sparse + residual), np.asarray(acc), rtol=1e-6)
+    assert int((np.asarray(sparse) != 0).sum()) <= max(1, int(64 * 0.1))
+    # top-k by magnitude: the transmitted part carries the largest coordinates
+    kept = np.abs(np.asarray(sparse))[np.asarray(sparse) != 0].min()
+    dropped = np.abs(np.asarray(residual)).max()
+    assert kept >= dropped - 1e-6

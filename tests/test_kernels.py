@@ -1,0 +1,79 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("nq,nd,dim", [(8, 256, 64), (16, 512, 128), (128, 1024, 256)])
+@pytest.mark.parametrize("k", [5, 32])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_score_topk_sweep(rng, nq, nd, dim, k, dtype):
+    q = _rand(rng, (nq, dim), dtype)
+    d = _rand(rng, (nd, dim), dtype)
+    s, i = ops.score_topk(q, d, k=k, block_d=128)
+    rs, ri = ref.score_topk_ref(q, d, k=k)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=tol, atol=tol)
+    # discrete boundary: compare as sets (ties may permute)
+    for a, b in zip(np.asarray(i), np.asarray(ri)):
+        assert len(set(a.tolist()) & set(b.tolist())) >= k - 1
+
+
+@pytest.mark.parametrize("s,h,kv,hd", [(128, 4, 4, 32), (256, 4, 2, 64), (256, 8, 1, 32)])
+@pytest.mark.parametrize("window,cap", [(None, None), (64, None), (None, 30.0), (32, 50.0)])
+def test_flash_attention_sweep(rng, s, h, kv, hd, window, cap):
+    b = 2
+    q = _rand(rng, (b, s, h, hd), jnp.float32)
+    k = _rand(rng, (b, s, kv, hd), jnp.float32)
+    v = _rand(rng, (b, s, kv, hd), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=True, window=window, cap=cap,
+                            block_q=64, block_k=64)
+    r = ref.flash_attention_ref(q, k, v, causal=True, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(rng, dtype):
+    q = _rand(rng, (1, 128, 4, 32), dtype)
+    k = _rand(rng, (1, 128, 2, 32), dtype)
+    v = _rand(rng, (1, 128, 2, 32), dtype)
+    o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    r = ref.flash_attention_ref(q, k, v)
+    tol = 3e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("s,kv,g,t", [(512, 2, 2, 300), (1024, 4, 1, 1023), (512, 1, 8, 0)])
+@pytest.mark.parametrize("window", [None, 128])
+def test_flash_decode_sweep(rng, s, kv, g, t, window):
+    b, hd = 2, 32
+    h = kv * g
+    q = _rand(rng, (b, h, hd), jnp.float32)
+    kc = _rand(rng, (b, s, kv, hd), jnp.float32)
+    vc = _rand(rng, (b, s, kv, hd), jnp.float32)
+    o = ops.flash_decode(q, kc, vc, jnp.asarray(t), window=window, block_s=128)
+    r = ref.flash_decode_ref(q, kc, vc, t, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=3e-4, atol=3e-5)
+
+
+def test_score_topk_matches_scan_engine(rng):
+    """The kernel is a drop-in for the scan engine's dense path."""
+    from repro.core import scan, scoring
+
+    q = _rand(rng, (8, 128), jnp.float32)
+    d = _rand(rng, (512, 128), jnp.float32)
+    state = scan.search_local(q, d, scoring.get_scorer("dense_dot"), k=9, chunk_size=128)
+    s, i = ops.score_topk(q, d, k=9, block_d=128)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(state.scores), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(state.ids))

@@ -1,0 +1,86 @@
+"""Sequential scan == inverted index (the system-level correctness oracle:
+identical scoring math on both paths, per DESIGN §4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anchors, invindex, scan, scoring, topk
+from repro.data import synthetic
+
+VOCAB = 500
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synthetic.make_corpus(n_docs=256, vocab=VOCAB, max_len=24, seed=3)
+
+
+@pytest.fixture(scope="module")
+def stats_and_index(corpus):
+    idx = invindex.build_index(corpus.tokens, corpus.lengths, vocab=VOCAB)
+    return invindex.stats_from_index(idx), idx
+
+
+def test_stats_job_matches_index(corpus, stats_and_index):
+    istats, _ = stats_and_index
+    jstats = anchors.collection_stats(
+        jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths), vocab=VOCAB, chunk_size=64
+    )
+    np.testing.assert_array_equal(np.asarray(jstats.cf), istats.cf)
+    np.testing.assert_array_equal(np.asarray(jstats.df), istats.df)
+    assert int(jstats.total_terms) == int(istats.total_terms)
+
+
+@pytest.mark.parametrize("scorer_name", ["ql_lm", "bm25"])
+def test_scan_equals_index(corpus, stats_and_index, scorer_name):
+    istats, idx = stats_and_index
+    queries = synthetic.make_queries(corpus, n_queries=12, seed=4)
+    scorer = scoring.get_scorer(scorer_name)
+    state = scan.search_local(
+        jnp.asarray(queries), (jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths)),
+        scorer, k=8, chunk_size=64, stats=istats,
+    )
+    ref_s, ref_i = invindex.search(idx, queries, istats, k=8, scorer=scorer_name)
+    np.testing.assert_allclose(np.asarray(state.scores), ref_s, rtol=3e-5, atol=3e-5)
+    # ids may permute under float ties; demand high agreement
+    agree = np.mean([len(set(a) & set(b)) / 8 for a, b in zip(np.asarray(state.ids), ref_i)])
+    assert agree > 0.9
+
+
+def test_padded_docs_never_surface(corpus, stats_and_index):
+    istats, _ = stats_and_index
+    queries = synthetic.make_queries(corpus, n_queries=4, seed=5)
+    toks = jnp.concatenate(
+        [jnp.asarray(corpus.tokens), jnp.full((64, corpus.tokens.shape[1]), -1, jnp.int32)]
+    )
+    lens = jnp.concatenate([jnp.asarray(corpus.lengths), jnp.zeros(64, jnp.int32)])
+    state = scan.search_local(
+        jnp.asarray(queries), (toks, lens), scoring.get_scorer("ql_lm"),
+        k=16, chunk_size=64, stats=istats,
+    )
+    assert int(jnp.max(state.ids)) < 256  # no pad id in the top-k
+
+
+def test_dense_scan_matches_oracle():
+    q = jnp.asarray(np.random.default_rng(0).standard_normal((8, 32)), jnp.float32)
+    d = jnp.asarray(np.random.default_rng(1).standard_normal((128, 32)), jnp.float32)
+    state = scan.search_local(q, d, scoring.get_scorer("dense_dot"), k=7, chunk_size=32)
+    ref = scan.search_dense_host(q, d, 7)
+    np.testing.assert_allclose(np.asarray(state.scores), np.asarray(ref.scores), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(state.ids), np.asarray(ref.ids))
+
+
+def test_anchor_extraction_groups_by_dst():
+    dst, toks = synthetic.make_links(n_docs=32, n_links=100, vocab=VOCAB, seed=6)
+    out, lens = anchors.extract_anchors(
+        jnp.asarray(dst), jnp.asarray(toks), n_docs=32, max_anchor_len=48
+    )
+    out = np.asarray(out)
+    # every non-pad token in row d must come from an anchor pointing at d
+    for d in range(32):
+        got = out[d][out[d] >= 0]
+        pool = toks[dst == d]
+        pool = pool[pool >= 0]
+        assert set(got.tolist()) <= set(pool.tolist())
+    assert int(lens.sum()) > 0

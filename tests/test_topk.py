@@ -1,0 +1,67 @@
+"""Property tests for the mergeable top-k combiner (paper's core invariant:
+any chunking/ordering of the scan merges to the same top-k)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topk
+
+
+def oracle(scores: np.ndarray, ids: np.ndarray, k: int):
+    order = np.argsort(-scores, kind="stable")[:k]
+    out_s = np.full(k, -np.inf)
+    out_i = np.full(k, -1, np.int64)
+    out_s[: len(order)] = scores[order]
+    out_i[: len(order)] = ids[order]
+    return out_s, out_i
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    st.integers(1, 8),  # k
+    st.lists(st.floats(-100, 100, allow_nan=False, width=32), min_size=1, max_size=60),
+    st.integers(1, 5),  # number of chunks
+)
+def test_chunked_update_matches_oracle(k, scores, n_chunks):
+    scores = np.asarray(scores, np.float32)
+    scores = np.unique(scores)  # distinct values: id ordering is determined
+    np.random.shuffle(scores)
+    ids = np.arange(len(scores))
+    state = topk.init(k, ())
+    for chunk in np.array_split(np.arange(len(scores)), n_chunks):
+        if len(chunk) == 0:
+            continue
+        state = topk.update(state, jnp.asarray(scores[chunk]), jnp.asarray(ids[chunk]))
+    ref_s, ref_i = oracle(scores, ids, k)
+    np.testing.assert_allclose(np.asarray(state.scores), ref_s)
+    np.testing.assert_array_equal(np.asarray(state.ids), ref_i)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_merge_associative_commutative(k, seed):
+    r = np.random.default_rng(seed)
+    def mk():
+        n = int(r.integers(1, 12))
+        s = r.standard_normal(n).astype(np.float32) * 10
+        i = r.integers(0, 1000, n)
+        st_ = topk.init(k, ())
+        return topk.update(st_, jnp.asarray(s), jnp.asarray(i))
+    a, b, c = mk(), mk(), mk()
+    ab_c = topk.merge(topk.merge(a, b), c)
+    a_bc = topk.merge(a, topk.merge(b, c))
+    np.testing.assert_allclose(np.asarray(ab_c.scores), np.asarray(a_bc.scores))
+    ba = topk.merge(b, a)
+    ab = topk.merge(a, b)
+    np.testing.assert_allclose(np.asarray(ab.scores), np.asarray(ba.scores))
+
+
+def test_batched_state_and_dense():
+    s = jnp.asarray(np.random.default_rng(1).standard_normal((4, 50)), jnp.float32)
+    state = topk.topk_dense(s, 5)
+    assert state.scores.shape == (4, 5)
+    # folding strictly-worse candidates leaves the state unchanged
+    st2 = topk.update(state, s - 100.0, jnp.broadcast_to(jnp.arange(50, 100), s.shape))
+    np.testing.assert_allclose(np.asarray(st2.scores), np.asarray(state.scores))
+    np.testing.assert_array_equal(np.asarray(st2.ids), np.asarray(state.ids))
