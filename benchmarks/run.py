@@ -1,30 +1,35 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 """Benchmark harness: fig2 scaling (C1/C2), table1 LOC (C3), P@k quality
-(C4), corpus-prep throughput, dense-scan throughput. Each module validates
-its paper claim with asserts and contributes CSV rows."""
+(C4), corpus-prep throughput, dense-scan throughput, serve-mode latency.
+Each module validates its paper claim with asserts and contributes CSV
+rows. Modules are imported and run independently: a failure (including an
+import error) in one benchmark is reported and the rest still run."""
 
 from __future__ import annotations
 
+import importlib
 import sys
 import traceback
 
+MODULES = (
+    "table1_loc",
+    "quality_pk",
+    "anchors_throughput",
+    "retrieval_scan",
+    "fig2_scaling",
+    "serve_latency",
+)
+
 
 def main() -> None:
-    from benchmarks import anchors_throughput, fig2_scaling, quality_pk, retrieval_scan, table1_loc
-
     rows: list[tuple] = []
     failures = []
-    for name, mod in (
-        ("table1_loc", table1_loc),
-        ("quality_pk", quality_pk),
-        ("anchors_throughput", anchors_throughput),
-        ("retrieval_scan", retrieval_scan),
-        ("fig2_scaling", fig2_scaling),
-    ):
+    for name in MODULES:
         try:
+            mod = importlib.import_module(f"benchmarks.{name}")
             mod.run(rows)
             print(f"# [ok] {name}", file=sys.stderr)
-        except Exception:  # noqa: BLE001
+        except Exception:  # noqa: BLE001 — isolate per-benchmark failures
             failures.append(name)
             traceback.print_exc()
     print("name,us_per_call,derived")

@@ -1,0 +1,70 @@
+"""Serve-mode benchmark: batch-size vs latency/throughput -> BENCH_serve.json.
+
+The service-layer view of claim C1: the microbatcher's block size is the
+amortization lever, so the curve of per-query latency against batch size is
+the serving-relevant restatement of paper Figure 2. Runs both session
+kinds — the lexical raw-token scan and the dense Pallas-kernel path — and
+writes the lexical curve (the paper's setting) to ``BENCH_serve.json``.
+
+On this CPU host the scan has no shared I/O fixed cost, so the measured
+curve is reported, not asserted (same caveat as fig2_scaling); the asserts
+here check service invariants: every submitted query is answered exactly
+once and padding never leaks into results.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_collection
+from repro.data import synthetic
+from repro.serve import DenseSession, LexicalSession
+from repro.serve.bench import sweep_batch_sizes, write_bench_json
+
+BATCH_SIZES = (16, 64, 256)
+K = 32
+CHUNK = 512
+DENSE_DIM = 128
+DENSE_DOCS = 16_384
+
+
+def run(csv_rows: list):
+    # --- lexical serve curve (the paper's setting) ------------------------
+    corpus, stats, _ = make_collection()
+    session = LexicalSession(
+        corpus.tokens, corpus.lengths, "ql_lm", k=K, chunk_size=CHUNK, stats=stats
+    )
+    payload = sweep_batch_sizes(
+        session,
+        lambda n, seed: synthetic.make_queries(corpus, n_queries=n, seed=200 + seed),
+        BATCH_SIZES,
+        repeats=2,
+    )
+    for pt in payload["curve"]:
+        csv_rows.append(
+            (f"serve_lexical_b{pt['batch']}", pt["us_per_query"], f"qps={pt['qps']:.1f}")
+        )
+    csv_rows.append(
+        ("serve_lexical_amortization_x", payload.get("amortization_x", 1.0),
+         "C1 serve-mode (report; CPU host has no shared I/O cost)")
+    )
+
+    # --- dense serve curve (Pallas kernel dispatch) -----------------------
+    vecs = synthetic.make_dense_corpus(n_docs=DENSE_DOCS, dim=DENSE_DIM, seed=7)
+    dsession = DenseSession(vecs, "dense_dot", k=K, chunk_size=2048, use_kernel=True)
+    rng = np.random.default_rng(11)
+    dense_payload = sweep_batch_sizes(
+        dsession,
+        lambda n, seed: rng.standard_normal((n, DENSE_DIM)).astype(np.float32),
+        BATCH_SIZES,
+        repeats=2,
+    )
+    for pt in dense_payload["curve"]:
+        csv_rows.append(
+            (f"serve_dense_b{pt['batch']}", pt["us_per_query"], f"qps={pt['qps']:.1f}")
+        )
+
+    payload["dense"] = dense_payload
+    path = write_bench_json(payload)
+    csv_rows.append(("serve_bench_json", float(len(payload["curve"])), path))
+    return payload

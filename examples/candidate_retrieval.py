@@ -1,14 +1,18 @@
-"""MIREX as a recsys retrieval engine: score one user against 200k candidates
-with MIND's multi-interest model, fused scan + top-k.
+"""MIREX as a recsys retrieval service: score users against 200k candidates
+with MIND's multi-interest model, served through ``repro.serve``.
 
     PYTHONPATH=src python examples/candidate_retrieval.py
 
-Shows the retrieval_cand integration (DESIGN §3): the candidate corpus is the
-"document collection", the user representation is the "query", the per-model
-score_block plugs into the same scan engine, and the Pallas score_topk kernel
-is the drop-in dense hot path.
+Shows the retrieval_cand integration (DESIGN §3): the candidate corpus is
+the "document collection" held resident by a :class:`DenseSession`, each
+user representation is a "query" admitted to the :class:`RetrievalService`,
+and the microbatcher forms the query blocks that the Pallas score_topk
+kernel scans (dense dispatch). Multi-interest scoring stays model-side —
+each interest capsule is submitted as its own query and the per-interest
+top-k lists are max-merged client-side.
 """
 
+import argparse
 import time
 
 import jax
@@ -16,45 +20,77 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import reduced_config
-from repro.core import scan, scoring, topk
-from repro.kernels import ops
+from repro.core import scan
 from repro.models import recsys
+from repro.serve import DenseSession, RetrievalService
 
 N_CANDIDATES = 200_000
 K = 50
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-users", type=int, default=4)
+    ap.add_argument("--n-candidates", type=int, default=N_CANDIDATES)
+    ap.add_argument("--k", type=int, default=K)
+    args = ap.parse_args()
+
     cfg = reduced_config("mind")
     params = recsys.init_params(cfg, jax.random.key(0))
-    # fake a user with a 12-item history
-    history = jnp.asarray(np.random.default_rng(1).integers(1, cfg.n_items, (1, 12)), jnp.int32)
-    caps = recsys.mind_interests(params, history, cfg)  # [1, I, d]
+    # fake users with 12-item histories
+    history = jnp.asarray(
+        np.random.default_rng(1).integers(1, cfg.n_items, (args.n_users, 12)), jnp.int32
+    )
+    caps = recsys.mind_interests(params, history, cfg)  # [U, I, d]
+    n_users, n_interests, dim = caps.shape
     print(f"user interests: {caps.shape}")
 
-    cand = jnp.asarray(
-        np.random.default_rng(2).standard_normal((N_CANDIDATES, cfg.embed_dim)), jnp.float32
+    cand = np.random.default_rng(2).standard_normal(
+        (args.n_candidates, cfg.embed_dim)
+    ).astype(np.float32)
+
+    # resident candidate corpus + service; dense blocks go to the Pallas kernel
+    session = DenseSession(cand, "dense_dot", k=args.k, chunk_size=1000, use_kernel=True)
+    service = RetrievalService({"dense": session}, max_batch=64, max_delay=2e-3)
+
+    t0 = time.perf_counter()
+    rids = np.empty((n_users, n_interests), np.int64)
+    for u in range(n_users):
+        for i in range(n_interests):  # one query per interest capsule
+            rids[u, i] = service.submit(np.asarray(caps[u, i]), "dense")
+    results = service.poll()
+    results.update(service.drain())
+    dt = time.perf_counter() - t0
+    rec = service.metrics[-1]
+    print(f"served {n_users * n_interests} interest queries in {dt:.3f}s "
+          f"(last block: {rec.n_real} queries, {rec.us_per_query:.0f} µs/query)")
+
+    # client-side multi-interest reduce: max over the user's interest lists
+    for u in range(min(n_users, 2)):
+        per_interest = [results[rids[u, i]] for i in range(n_interests)]
+        flat_s = np.concatenate([r.scores for r in per_interest])
+        flat_i = np.concatenate([r.ids for r in per_interest])
+        order = np.argsort(-flat_s, kind="stable")
+        seen, merged = set(), []
+        for j in order:
+            if flat_i[j] not in seen:
+                seen.add(flat_i[j])
+                merged.append(j)
+            if len(merged) == args.k:
+                break
+        print(f"user {u}: best candidate {flat_i[merged[0]]} score {flat_s[merged[0]]:.3f}")
+
+    # cross-check the service's dense dispatch against the scan engine
+    q0 = caps[:, 0]  # [U, dim] — first interest of every user
+    ref = scan.search_local(
+        q0, jnp.asarray(cand),
+        session.scorer, k=args.k, chunk_size=1000,
     )
-
-    # path 1: multi-interest scoring through the generic scan engine
-    t0 = time.perf_counter()
-    scores = recsys.score_block_multi_interest(caps, cand)
-    state = topk.topk_dense(scores, K)
-    jax.block_until_ready(state.scores)
-    print(f"multi-interest scan: top-{K} in {time.perf_counter()-t0:.3f}s; "
-          f"best id {int(state.ids[0,0])} score {float(state.scores[0,0]):.3f}")
-
-    # path 2: the fused Pallas kernel on the best single interest (dense path)
-    q = caps[:, 0]
-    t0 = time.perf_counter()
-    s, i = ops.score_topk(q, cand, k=K, block_d=1000)
-    jax.block_until_ready(s)
-    print(f"pallas score_topk (interpret): top-{K} in {time.perf_counter()-t0:.3f}s")
-
-    # cross-check against the engine
-    ref = scan.search_local(q, cand, scoring.get_scorer("dense_dot"), k=K, chunk_size=1000)
-    np.testing.assert_allclose(np.asarray(s), np.asarray(ref.scores), rtol=1e-5)
-    print("kernel == scan engine ✓")
+    got_s = np.stack([results[rids[u, 0]].scores for u in range(n_users)])
+    got_i = np.stack([results[rids[u, 0]].ids for u in range(n_users)])
+    np.testing.assert_allclose(got_s, np.asarray(ref.scores), rtol=1e-5)
+    np.testing.assert_array_equal(got_i, np.asarray(ref.ids))
+    print("service (Pallas kernel) == scan engine ✓")
 
 
 if __name__ == "__main__":

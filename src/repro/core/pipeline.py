@@ -33,6 +33,12 @@ def num_chunks(n: int, chunk_size: int) -> int:
     return -(-n // chunk_size)
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1). Shared by the kernel combiner's
+    bitonic padding and the serve layer's batch buckets."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 def pad_leading(tree: Pytree, n_target: int, pad_values: Pytree | None = None) -> Pytree:
     """Pad every leaf's leading dim to ``n_target`` (with leaf-specific fill)."""
 

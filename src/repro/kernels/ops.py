@@ -1,13 +1,16 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container): the kernel body
-executes in Python on CPU for correctness; on a TPU backend the same call
-compiles to Mosaic.
+Backend selection: by default kernels run ``interpret=True`` off-TPU (this
+container) — the kernel body executes in Python on CPU for correctness —
+and compile to Mosaic on a TPU backend. Override either way with the
+``REPRO_KERNEL_BACKEND`` env var (``auto`` | ``interpret`` | ``compiled``)
+or programmatically with :func:`set_kernel_backend`.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 
@@ -15,15 +18,53 @@ from repro.kernels.flash_attn import flash_attention_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.score_topk import score_topk_pallas
 
+_BACKENDS = ("auto", "interpret", "compiled")
+_backend_override: str | None = None
+
+
+def set_kernel_backend(mode: str | None) -> None:
+    """Force the Pallas execution mode for all kernel wrappers.
+
+    ``"interpret"`` runs kernel bodies in Python (portable, slow),
+    ``"compiled"`` always lowers to the real backend (Mosaic on TPU),
+    ``"auto"``/``None`` restores the default backend sniffing. Clears all
+    jit caches (``jax.clear_caches``) so already-traced callers — including
+    outer jitted closures like the serve sessions — retrace with the new
+    mode on their next call.
+    """
+    global _backend_override
+    if mode is not None and mode not in _BACKENDS:
+        raise ValueError(f"unknown kernel backend {mode!r}; expected one of {_BACKENDS}")
+    _backend_override = None if mode in (None, "auto") else mode
+    jax.clear_caches()
+
+
+def kernel_backend() -> str:
+    """Resolved mode: explicit override > env var > backend sniffing."""
+    mode = _backend_override or os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+    if mode not in _BACKENDS:
+        raise ValueError(
+            f"REPRO_KERNEL_BACKEND={mode!r} invalid; expected one of {_BACKENDS}"
+        )
+    if mode == "auto":
+        return "compiled" if jax.default_backend() == "tpu" else "interpret"
+    return mode
+
 
 def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+    return kernel_backend() == "interpret"
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_d"))
-def score_topk(q, d, *, k: int, block_d: int = 1024):
-    """Fused streaming score+top-k (MIREX map+combine). -> (scores, ids)."""
-    return score_topk_pallas(q, d, k=k, block_d=block_d, interpret=_interpret_default())
+@functools.partial(jax.jit, static_argnames=("k", "block_d", "merge"))
+def score_topk(q, d, *, k: int, block_d: int = 1024, merge: str = "bitonic"):
+    """Fused streaming score+top-k (MIREX map+combine). -> (scores, ids).
+
+    ``merge="bitonic"`` is the k-bounded combiner (O(k log k) per block);
+    ``merge="concat"`` is the legacy full re-sort, kept for parity checks.
+    """
+    return score_topk_pallas(
+        q, d, k=k, block_d=block_d, merge=merge, interpret=_interpret_default()
+    )
 
 
 @functools.partial(

@@ -8,6 +8,15 @@ score matrix never exists, so HBM traffic is ``O(n_d · dim)`` instead of
 ``O(n_q · n_d)``. The TPU grid executes sequentially, which is exactly the
 combiner semantics: the output refs double as the running state.
 
+Combiner fold (``merge="bitonic"``, the default): the resident state is kept
+sorted descending, so folding a block only needs the block's own top-k
+(``lax.top_k`` over ``block_d``, sorted descending for free) merged against
+the state. Two sorted-k lists concatenated head-to-tail form a bitonic
+sequence, so a single O(k log k) bitonic *merge* network — ``log2(2k)``
+compare-exchange stages, each a reshape + elementwise max/min on the VPU —
+re-sorts them, instead of the legacy ``concatenate + top_k`` re-sort over
+``k + block_d`` candidates (``merge="concat"``, kept for parity testing).
+
 BlockSpecs: Q ``(n_q, dim)`` resident across steps; D ``(block_d, dim)``
 streamed; outputs ``(n_q, k)`` pinned to block (0, 0). MXU alignment wants
 ``n_q % 8 == 0``, ``dim % 128 == 0``, ``block_d % 128 == 0``.
@@ -21,8 +30,58 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.pipeline import next_pow2
 
-def _score_topk_kernel(q_ref, d_ref, out_s_ref, out_i_ref, *, block_d: int, k: int):
+
+def bitonic_merge_desc(
+    a_s: jax.Array, a_i: jax.Array, b_s: jax.Array, b_i: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Merge two descending-sorted ``[..., m]`` (score, id) lists; keep top m.
+
+    ``a ++ reverse(b)`` is bitonic (descending then ascending), so one
+    bitonic merge network — ``log2(2m) `` compare-exchange stages expressed
+    as reshapes + ``where`` (VPU-friendly: no gathers) — yields the 2m
+    values fully sorted descending; the first m are the merged top-m.
+    ``m`` must be a power of two (pad with ``-inf``/``-1`` first).
+    """
+    m = a_s.shape[-1]
+    assert m & (m - 1) == 0, f"bitonic merge needs power-of-two width, got {m}"
+    lead = a_s.shape[:-1]
+    s = jnp.concatenate([a_s, b_s[..., ::-1]], axis=-1)
+    i = jnp.concatenate([a_i, b_i[..., ::-1]], axis=-1)
+    length = 2 * m
+    stride = m
+    while stride >= 1:
+        sr = s.reshape(*lead, length // (2 * stride), 2, stride)
+        ir = i.reshape(*lead, length // (2 * stride), 2, stride)
+        lo_s, hi_s = sr[..., 0, :], sr[..., 1, :]
+        lo_i, hi_i = ir[..., 0, :], ir[..., 1, :]
+        keep = lo_s >= hi_s  # descending: max goes to the lower position
+        max_s = jnp.where(keep, lo_s, hi_s)
+        min_s = jnp.where(keep, hi_s, lo_s)
+        max_i = jnp.where(keep, lo_i, hi_i)
+        min_i = jnp.where(keep, hi_i, lo_i)
+        s = jnp.stack([max_s, min_s], axis=-2).reshape(*lead, length)
+        i = jnp.stack([max_i, min_i], axis=-2).reshape(*lead, length)
+        stride //= 2
+    return s[..., :m], i[..., :m]
+
+
+def _pad_desc(s: jax.Array, i: jax.Array, width: int) -> tuple[jax.Array, jax.Array]:
+    """Right-pad descending-sorted lists with (-inf, -1) sentinels."""
+    pad = width - s.shape[-1]
+    if pad == 0:
+        return s, i
+    widths = [(0, 0)] * (s.ndim - 1) + [(0, pad)]
+    return (
+        jnp.pad(s, widths, constant_values=-jnp.inf),
+        jnp.pad(i, widths, constant_values=-1),
+    )
+
+
+def _score_topk_kernel(
+    q_ref, d_ref, out_s_ref, out_i_ref, *, block_d: int, k: int, merge: str
+):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -38,12 +97,25 @@ def _score_topk_kernel(q_ref, d_ref, out_s_ref, out_i_ref, *, block_d: int, k: i
     )  # [n_q, block_d] on the MXU
     ids = step * block_d + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
 
-    # combiner fold: merge block candidates into the running state
-    cat_s = jnp.concatenate([out_s_ref[...], s], axis=1)
-    cat_i = jnp.concatenate([out_i_ref[...], ids], axis=1)
-    top_s, pos = jax.lax.top_k(cat_s, k)
-    out_s_ref[...] = top_s
-    out_i_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+    if merge == "concat":
+        # legacy combiner: re-sort all k + block_d candidates every step
+        cat_s = jnp.concatenate([out_s_ref[...], s], axis=1)
+        cat_i = jnp.concatenate([out_i_ref[...], ids], axis=1)
+        top_s, pos = jax.lax.top_k(cat_s, k)
+        out_s_ref[...] = top_s
+        out_i_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+        return
+
+    # k-bounded combiner: only the block's top-k ever meets the state
+    k_pad = next_pow2(k)
+    cand_k = min(k, block_d)
+    cand_s, cand_pos = jax.lax.top_k(s, cand_k)  # sorted descending
+    cand_i = jnp.take_along_axis(ids, cand_pos, axis=1)
+    cand_s, cand_i = _pad_desc(cand_s, cand_i, k_pad)
+    state_s, state_i = _pad_desc(out_s_ref[...], out_i_ref[...], k_pad)
+    top_s, top_i = bitonic_merge_desc(state_s, state_i, cand_s, cand_i)
+    out_s_ref[...] = top_s[:, :k]
+    out_i_ref[...] = top_i[:, :k]
 
 
 def score_topk_pallas(
@@ -53,11 +125,14 @@ def score_topk_pallas(
     k: int,
     block_d: int = 1024,
     interpret: bool = True,
+    merge: str = "bitonic",
 ) -> tuple[jax.Array, jax.Array]:
+    if merge not in ("bitonic", "concat"):
+        raise ValueError(f"unknown merge {merge!r}; expected 'bitonic' or 'concat'")
     n_q, dim = q.shape
     n_d, _ = d.shape
     assert n_d % block_d == 0, (n_d, block_d)
-    kernel = functools.partial(_score_topk_kernel, block_d=block_d, k=k)
+    kernel = functools.partial(_score_topk_kernel, block_d=block_d, k=k, merge=merge)
     return pl.pallas_call(
         kernel,
         grid=(n_d // block_d,),

@@ -1,14 +1,16 @@
-"""Serving driver: batched MIREX search requests or LM decode.
+"""Serving driver: thin CLI over the ``repro.serve`` subsystem (or LM decode).
 
     PYTHONPATH=src python -m repro.launch.serve --mode search --n-queries 256
     PYTHONPATH=src python -m repro.launch.serve --mode decode --tokens 32
 
-Search mode runs the paper's system as an online service: requests are
-batched into query blocks (the amortization lever of claim C1 — bigger
-batches, cheaper per query) against a resident corpus. Decode mode runs
-autoregressive generation with the split-KV serve_step. Reduced configs so
-it runs on the CPU host; the same code paths are what the dry-run lowers at
-production scale.
+Search mode runs the paper's system as an online service: queries are
+admitted to the :class:`repro.serve.RetrievalService`, microbatched into
+query blocks (the amortization lever of claim C1 — bigger blocks, cheaper
+per query) and scanned against a resident corpus; per-batch latency is
+printed and a batch-size/latency sweep is written to ``BENCH_serve.json``.
+Decode mode runs autoregressive generation with the split-KV serve_step.
+Reduced configs so it runs on the CPU host; the same code paths are what
+the dry-run lowers at production scale.
 """
 
 from __future__ import annotations
@@ -18,38 +20,79 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import reduced_config
-from repro.core import anchors, scan, scoring
+from repro.core import anchors
 from repro.data import synthetic
 from repro.distributed.sharding import rules_for_mesh
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer as tfm
+from repro.serve import LexicalSession, RetrievalService
+from repro.serve.bench import sweep_batch_sizes, write_bench_json
 
 
-def serve_search(n_queries: int, n_docs: int = 8192, batches: int = 4):
+def serve_search(
+    n_queries: int,
+    n_docs: int = 8192,
+    batches: int = 4,
+    *,
+    max_batch: int | None = None,
+    max_delay_ms: float = 5.0,
+    scorer: str | None = None,
+    sweep_sizes: tuple[int, ...] = (32, 128, 512),
+    bench_out: str = "BENCH_serve.json",
+):
     cfg = reduced_config("mirex")
-    corpus = synthetic.make_corpus(n_docs=n_docs, vocab=cfg.vocab, max_len=cfg.max_doc_len, seed=0)
-    stats = anchors.collection_stats(
-        jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths), vocab=cfg.vocab, chunk_size=512
+    corpus = synthetic.make_corpus(
+        n_docs=n_docs, vocab=cfg.vocab, max_len=cfg.max_doc_len, seed=0
     )
-    d_tokens, d_len = jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths)
-    scorer = scoring.get_scorer(cfg.scorer)
+    stats = anchors.collection_stats(
+        jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths),
+        vocab=cfg.vocab, chunk_size=512,
+    )
+    session = LexicalSession(
+        corpus.tokens,
+        corpus.lengths,
+        scorer or cfg.scorer,
+        k=cfg.k,
+        chunk_size=cfg.chunk_size,
+        stats=stats,
+    )
+    service = RetrievalService(
+        {"lexical": session},
+        max_batch=max_batch or n_queries,
+        max_delay=max_delay_ms * 1e-3,
+    )
 
-    @jax.jit
-    def handle(q):
-        return scan.search_local(
-            q, (d_tokens, d_len), scorer, k=cfg.k, chunk_size=cfg.chunk_size, stats=stats
-        )
-
+    print(f"== streaming {batches} request waves of {n_queries} queries "
+          f"(corpus: {session.n_docs} docs, scorer {session.scorer.name}, k={session.k}) ==")
     for b in range(batches):
-        q = jnp.asarray(synthetic.make_queries(corpus, n_queries=n_queries, seed=10 + b))
-        t0 = time.perf_counter()
-        state = jax.block_until_ready(handle(q))
-        dt = time.perf_counter() - t0
-        print(f"batch {b}: {n_queries} queries in {dt*1e3:.1f} ms "
-              f"({dt/n_queries*1e6:.0f} µs/query), top-1 of q0 = doc {int(state.ids[0,0])}")
+        queries = synthetic.make_queries(corpus, n_queries=n_queries, seed=10 + b)
+        n_seen = len(service.metrics)
+        rids = [service.submit(q, "lexical") for q in queries]
+        results = service.poll()
+        results.update(service.drain())  # deadline not yet due -> flush the tail
+        assert len(results) == len(rids)
+        for blk, rec in enumerate(service.metrics[n_seen:]):
+            print(
+                f"wave {b} block {blk}: {rec.n_real} queries (padded {rec.n_padded}, "
+                f"trigger={rec.trigger}) in {rec.latency_s*1e3:.1f} ms "
+                f"({rec.us_per_query:.0f} µs/query)"
+            )
+        print(f"wave {b}: top-1 of q0 = doc {int(results[rids[0]].ids[0])}")
+
+    print(f"== C1 sweep: batch sizes {sweep_sizes} ==")
+    payload = sweep_batch_sizes(
+        session,
+        lambda n, seed: synthetic.make_queries(corpus, n_queries=n, seed=100 + seed),
+        sweep_sizes,
+    )
+    for pt in payload["curve"]:
+        print(f"  batch {pt['batch']:5d}: {pt['latency_ms']:8.1f} ms "
+              f"({pt['us_per_query']:8.0f} µs/query, {pt['qps']:8.1f} qps)")
+    path = write_bench_json(payload, bench_out)
+    print(f"amortization {payload.get('amortization_x', 1.0):.2f}x "
+          f"({sweep_sizes[0]} -> {sweep_sizes[-1]}); wrote {path}")
 
 
 def serve_decode(n_tokens: int, arch: str = "gemma2-2b", batch: int = 4):
@@ -77,11 +120,30 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("search", "decode"), default="search")
     ap.add_argument("--n-queries", type=int, default=256)
+    ap.add_argument("--n-docs", type=int, default=8192)
+    ap.add_argument("--batches", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="microbatch size trigger (default: --n-queries)")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="microbatch deadline trigger")
+    ap.add_argument("--scorer", default=None, help="lexical scorer (default: config)")
+    ap.add_argument("--sweep-sizes", type=int, nargs="+", default=[32, 128, 512],
+                    help="batch sizes for the C1 latency sweep")
+    ap.add_argument("--bench-out", default="BENCH_serve.json")
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--arch", default="gemma2-2b")
     args = ap.parse_args()
     if args.mode == "search":
-        serve_search(args.n_queries)
+        serve_search(
+            args.n_queries,
+            args.n_docs,
+            args.batches,
+            max_batch=args.max_batch,
+            max_delay_ms=args.max_delay_ms,
+            scorer=args.scorer,
+            sweep_sizes=tuple(args.sweep_sizes),
+            bench_out=args.bench_out,
+        )
     else:
         serve_decode(args.tokens, args.arch)
 

@@ -1,0 +1,26 @@
+"""Streaming retrieval service: admission, microbatching, resident sessions.
+
+Public surface:
+
+* :class:`~repro.serve.service.RetrievalService` — submit/poll/drain facade.
+* :class:`~repro.serve.session.LexicalSession` /
+  :class:`~repro.serve.session.DenseSession` — resident-corpus scan state.
+* :class:`~repro.serve.microbatch.Microbatcher` — deadline/size triggers +
+  MXU-bucket padding (importable standalone for tests).
+* :mod:`repro.serve.bench` — the C1 batch-size/latency sweep.
+"""
+
+from repro.serve.microbatch import Microbatcher, QueryBlock, SearchRequest
+from repro.serve.service import BatchRecord, RetrievalService, SearchResult
+from repro.serve.session import DenseSession, LexicalSession
+
+__all__ = [
+    "BatchRecord",
+    "DenseSession",
+    "LexicalSession",
+    "Microbatcher",
+    "QueryBlock",
+    "RetrievalService",
+    "SearchRequest",
+    "SearchResult",
+]

@@ -1,0 +1,79 @@
+"""Serve-mode benchmarking: batch-size vs latency/throughput (claim C1).
+
+``sweep_batch_sizes`` replays the same session at several microbatch sizes
+and records one curve point per size — per-query latency should *fall* as
+the block grows, because the corpus stream through the scan is paid once
+per block. ``write_bench_json`` persists the curve (BENCH_serve.json) so
+successive PRs can diff serving regressions.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.serve.service import RetrievalService
+
+
+def sweep_batch_sizes(
+    session,
+    make_queries: Callable[[int, int], np.ndarray],
+    batch_sizes: Sequence[int],
+    *,
+    repeats: int = 3,
+    warmup: int = 1,
+    max_delay: float = 60.0,
+) -> dict:
+    """Measure one full-block dispatch per batch size; median of repeats.
+
+    ``make_queries(n, seed)`` supplies the query rows. The session's corpus
+    stays resident across the whole sweep — only the service/batcher wrapper
+    is rebuilt per size, so this measures the steady-state serving path.
+    """
+    curve = []
+    for bs in batch_sizes:
+        service = RetrievalService(
+            {session.kind: session}, max_batch=bs, max_delay=max_delay
+        )
+        latencies = []
+        for rep in range(warmup + repeats):
+            queries = make_queries(bs, rep)
+            for row in queries:
+                service.submit(row, session.kind)
+            results = service.poll()
+            assert len(results) == bs, (len(results), bs)
+            if rep >= warmup:
+                latencies.append(service.metrics[-1].latency_s)
+        lat = float(np.median(latencies))
+        rec = service.metrics[-1]
+        curve.append(
+            {
+                "batch": bs,
+                "n_padded": rec.n_padded,
+                "latency_ms": lat * 1e3,
+                "us_per_query": lat / bs * 1e6,
+                "qps": bs / lat,
+            }
+        )
+    payload = {
+        "benchmark": "serve_latency",
+        "kind": session.kind,
+        "scorer": session.scorer.name,
+        "n_docs": session.n_docs,
+        "k": session.k,
+        "chunk_size": session.chunk_size,
+        "batch_sizes": list(batch_sizes),
+        "curve": curve,
+    }
+    if len(curve) >= 2:
+        payload["amortization_x"] = curve[0]["us_per_query"] / curve[-1]["us_per_query"]
+    return payload
+
+
+def write_bench_json(payload: dict, path: str = "BENCH_serve.json") -> str:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path

@@ -1,0 +1,158 @@
+"""Admission queue + microbatcher: turn a request stream into query blocks.
+
+Claim C1 makes MIREX a natural *service*: per-query scan cost falls as the
+query block grows, so the serving layer's job is to hold arriving queries
+just long enough to form a big block, then scan once for all of them. Two
+triggers close a block:
+
+* **size** — the queue reached ``max_batch`` queries (the amortization
+  target); fire immediately, waiting longer buys nothing.
+* **deadline** — the *oldest* queued request has waited ``max_delay``
+  seconds; fire with whatever is queued (tail-latency bound).
+
+Blocks are padded up to MXU-friendly bucket sizes (powers of two, at least
+``min_bucket``) so the jitted scan handlers retrace once per bucket instead
+of once per distinct batch size. Padding rows use a sentinel query (PAD
+tokens / zero vectors) whose results are dropped by :func:`unpad_results`.
+
+Time is injected (every mutating call takes ``now``) so trigger logic is
+deterministic under test; the service layer supplies a real clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.pipeline import next_pow2
+
+
+def bucket_size(n: int, *, min_bucket: int = 8) -> int:
+    """Padded batch size for ``n`` queries: next power of two, floored."""
+    if n < 1:
+        raise ValueError("empty batch has no bucket")
+    return max(min_bucket, next_pow2(n))
+
+
+def pad_rows(queries: np.ndarray, n_target: int, pad_value) -> np.ndarray:
+    """Pad the leading (batch) dim with sentinel rows up to ``n_target``."""
+    n = queries.shape[0]
+    if n > n_target:
+        raise ValueError(f"batch {n} exceeds target {n_target}")
+    if n == n_target:
+        return queries
+    pad = np.full((n_target - n, *queries.shape[1:]), pad_value, queries.dtype)
+    return np.concatenate([queries, pad], axis=0)
+
+
+def unpad_results(arr, n_real: int):
+    """Drop the rows that belong to padding queries."""
+    return arr[:n_real]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """One admitted query: tokens ``[L]`` (lexical) or a vector ``[dim]``."""
+
+    rid: int
+    query: np.ndarray
+    arrival: float
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryBlock:
+    """A closed microbatch, padded and ready to scan."""
+
+    queries: np.ndarray  # [n_padded, ...] — rows past n_real are sentinels
+    rids: tuple[int, ...]
+    n_real: int
+    trigger: str  # "size" | "deadline" | "flush"
+    closed_at: float
+    oldest_arrival: float
+
+    @property
+    def n_padded(self) -> int:
+        return self.queries.shape[0]
+
+
+class Microbatcher:
+    """Deadline/size-triggered admission queue for one query family.
+
+    ``pad_value`` fills both the sentinel rows of a short batch and must be
+    inert under the scorer (PAD_TOKEN for lexical queries, 0.0 for dense
+    vectors — both score every document identically, and their rows are
+    discarded before results leave the service).
+    """
+
+    def __init__(
+        self,
+        *,
+        max_batch: int = 64,
+        max_delay: float = 5e-3,
+        min_bucket: int = 8,
+        pad_value=0,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if max_delay < 0:
+            raise ValueError("max_delay must be >= 0")
+        self.max_batch = max_batch
+        self.max_delay = max_delay
+        self.min_bucket = min_bucket
+        self.pad_value = pad_value
+        self._pending: list[SearchRequest] = []
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, rid: int, query: np.ndarray, now: float) -> None:
+        self._pending.append(SearchRequest(rid=rid, query=np.asarray(query), arrival=now))
+
+    def _trigger(self, now: float) -> str | None:
+        if not self._pending:
+            return None
+        if len(self._pending) >= self.max_batch:
+            return "size"
+        if now - self._pending[0].arrival >= self.max_delay:
+            return "deadline"
+        return None
+
+    def ready(self, now: float) -> bool:
+        return self._trigger(now) is not None
+
+    def next_deadline(self) -> float | None:
+        """Absolute time at which the oldest request forces a flush."""
+        if not self._pending:
+            return None
+        return self._pending[0].arrival + self.max_delay
+
+    def pop_block(self, now: float, *, force: bool = False) -> QueryBlock | None:
+        """Close and return the next block, or None if no trigger fired."""
+        trigger = "flush" if (force and self._pending) else self._trigger(now)
+        if trigger is None:
+            return None
+        take, self._pending = (
+            self._pending[: self.max_batch],
+            self._pending[self.max_batch :],
+        )
+        stacked = np.stack([r.query for r in take], axis=0)
+        padded = pad_rows(
+            stacked, bucket_size(len(take), min_bucket=self.min_bucket), self.pad_value
+        )
+        return QueryBlock(
+            queries=padded,
+            rids=tuple(r.rid for r in take),
+            n_real=len(take),
+            trigger=trigger,
+            closed_at=now,
+            oldest_arrival=take[0].arrival,
+        )
+
+    def drain(self, now: float) -> list[QueryBlock]:
+        """Flush everything pending into (possibly several) blocks."""
+        blocks = []
+        while self._pending:
+            blocks.append(self.pop_block(now, force=True))
+        return blocks

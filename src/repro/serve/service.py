@@ -1,0 +1,149 @@
+"""The retrieval service: admission → microbatch → dispatch → unpad.
+
+Request lifecycle (see docs/ARCHITECTURE.md §Serve):
+
+1. ``submit(query, kind)`` admits a query into the kind's microbatcher and
+   returns a request id immediately (no device work on the submit path).
+2. ``poll()`` closes every block whose size/deadline trigger has fired and
+   dispatches it: lexical blocks to the raw-token chunked scan
+   (``scan.search_local`` fold), dense blocks to the Pallas fused
+   score+top-k kernel — one resident-corpus session per kind.
+3. Padding rows are stripped and per-request ``SearchResult``s are returned
+   keyed by request id; a ``BatchRecord`` per block (real/padded size,
+   queue wait, device latency, trigger) lands in ``service.metrics``.
+
+``drain()`` force-flushes at shutdown. The wall clock is injectable so the
+deadline trigger is testable; production callers use the monotonic clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping
+
+import numpy as np
+
+from repro.serve.microbatch import Microbatcher, QueryBlock, unpad_results
+from repro.serve.session import DenseSession, LexicalSession
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Per-request top-k, already on host with padding stripped."""
+
+    rid: int
+    scores: np.ndarray  # [k] float32, descending
+    ids: np.ndarray  # [k] int32 global doc ids
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchRecord:
+    """Telemetry for one dispatched block (one point on the C1 curve)."""
+
+    kind: str
+    n_real: int
+    n_padded: int
+    trigger: str
+    queue_wait_s: float  # oldest request's admission -> block close
+    latency_s: float  # dispatch -> results on host
+
+    @property
+    def us_per_query(self) -> float:
+        return self.latency_s / max(self.n_real, 1) * 1e6
+
+
+class RetrievalService:
+    """Dispatcher over resident-corpus sessions, one microbatcher per kind."""
+
+    def __init__(
+        self,
+        sessions: Mapping[str, LexicalSession | DenseSession],
+        *,
+        max_batch: int = 64,
+        max_delay: float = 5e-3,
+        min_bucket: int = 8,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if not sessions:
+            raise ValueError("need at least one session")
+        self.sessions = dict(sessions)
+        self._clock = clock
+        self._batchers = {
+            kind: Microbatcher(
+                max_batch=max_batch,
+                max_delay=max_delay,
+                min_bucket=min_bucket,
+                pad_value=sess.pad_value,
+            )
+            for kind, sess in self.sessions.items()
+        }
+        self._next_rid = 0
+        self.metrics: list[BatchRecord] = []
+
+    @property
+    def kinds(self) -> tuple[str, ...]:
+        return tuple(self.sessions)
+
+    def submit(self, query: np.ndarray, kind: str | None = None) -> int:
+        """Admit one query; returns its request id without blocking."""
+        if kind is None:
+            if len(self.sessions) != 1:
+                raise ValueError(f"ambiguous kind; service has {self.kinds}")
+            kind = next(iter(self.sessions))
+        if kind not in self._batchers:
+            raise KeyError(f"no session {kind!r}; available: {self.kinds}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._batchers[kind].submit(rid, query, self._clock())
+        return rid
+
+    def pending(self, kind: str | None = None) -> int:
+        if kind is not None:
+            return len(self._batchers[kind])
+        return sum(len(b) for b in self._batchers.values())
+
+    def _dispatch(self, kind: str, block: QueryBlock) -> dict[int, SearchResult]:
+        session = self.sessions[kind]
+        t0 = self._clock()
+        state = session.search(block.queries)
+        latency = self._clock() - t0
+        self.metrics.append(
+            BatchRecord(
+                kind=kind,
+                n_real=block.n_real,
+                n_padded=block.n_padded,
+                trigger=block.trigger,
+                queue_wait_s=block.closed_at - block.oldest_arrival,
+                latency_s=latency,
+            )
+        )
+        scores = unpad_results(np.asarray(state.scores), block.n_real)
+        ids = unpad_results(np.asarray(state.ids), block.n_real)
+        return {
+            rid: SearchResult(rid=rid, scores=scores[row], ids=ids[row])
+            for row, rid in enumerate(block.rids)
+        }
+
+    def poll(self) -> dict[int, SearchResult]:
+        """Dispatch every block whose size/deadline trigger has fired."""
+        out: dict[int, SearchResult] = {}
+        for kind, batcher in self._batchers.items():
+            while (block := batcher.pop_block(self._clock())) is not None:
+                out.update(self._dispatch(kind, block))
+        return out
+
+    def drain(self) -> dict[int, SearchResult]:
+        """Force-flush all pending queries (shutdown / end of stream)."""
+        out: dict[int, SearchResult] = {}
+        for kind, batcher in self._batchers.items():
+            for block in batcher.drain(self._clock()):
+                out.update(self._dispatch(kind, block))
+        return out
+
+    def next_deadline(self) -> float | None:
+        """Earliest pending deadline across kinds (event-loop sleep hint)."""
+        deadlines = [
+            d for b in self._batchers.values() if (d := b.next_deadline()) is not None
+        ]
+        return min(deadlines) if deadlines else None

@@ -1,0 +1,129 @@
+"""Resident-corpus sessions: the corpus lives on device, queries stream by.
+
+A session owns one scorer kind's device-resident state — token matrices +
+collection statistics for lexical scans, the vector matrix for dense scans —
+plus a jitted scan handler. The handler is traced once per padded batch
+bucket (``jax.jit`` caches by shape; the microbatcher's power-of-two
+buckets bound the number of traces), so steady-state serving never
+recompiles. This is the paper's "keep the collection on the cluster,
+ship only queries and top-k back" discipline, with HBM as the cluster.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anchors, scan, topk
+from repro.core.scoring import PAD_TOKEN, CollectionStats, Scorer, get_scorer
+
+
+class LexicalSession:
+    """Raw-token scan service state for one lexical scorer (ql_lm/bm25/...).
+
+    The fold path is :func:`repro.core.scan.search_local`'s chunked scan —
+    term frequencies recomputed from raw text per block, no index.
+    """
+
+    kind = "lexical"
+    pad_value = PAD_TOKEN
+
+    def __init__(
+        self,
+        tokens: np.ndarray,
+        lengths: np.ndarray,
+        scorer: Scorer | str,
+        *,
+        k: int,
+        chunk_size: int,
+        stats: CollectionStats | None = None,
+        vocab: int | None = None,
+    ):
+        self.scorer = get_scorer(scorer) if isinstance(scorer, str) else scorer
+        if self.scorer.kind != "lexical":
+            raise ValueError(f"scorer {self.scorer.name!r} is not lexical")
+        self.k = k
+        self.chunk_size = chunk_size
+        self._tokens = jnp.asarray(tokens, jnp.int32)
+        self._lengths = jnp.asarray(lengths, jnp.int32)
+        if self._tokens.shape[0] % chunk_size:
+            raise ValueError(
+                f"{self._tokens.shape[0]} docs not divisible by chunk {chunk_size}"
+            )
+        if stats is None:
+            if vocab is None:
+                raise ValueError("need stats or vocab to derive collection statistics")
+            stats = anchors.collection_stats(
+                self._tokens, self._lengths, vocab=vocab, chunk_size=chunk_size
+            )
+        self._stats = jax.tree.map(jnp.asarray, stats)
+
+        scorer_, k_, chunk_ = self.scorer, k, chunk_size
+        docs, st = (self._tokens, self._lengths), self._stats
+
+        @jax.jit
+        def _handle(q):
+            return scan.search_local(q, docs, scorer_, k=k_, chunk_size=chunk_, stats=st)
+
+        self._handle = _handle
+
+    @property
+    def n_docs(self) -> int:
+        return int(self._tokens.shape[0])
+
+    def search(self, q_block: np.ndarray) -> topk.TopKState:
+        """Scan one padded query block; blocks until results are on host."""
+        return jax.block_until_ready(self._handle(jnp.asarray(q_block, jnp.int32)))
+
+
+class DenseSession:
+    """Vector-scan service state; the hot path is the Pallas score+top-k
+    kernel (``use_kernel=True``), falling back to the pure-JAX chunked fold.
+    """
+
+    kind = "dense"
+    pad_value = 0.0
+
+    def __init__(
+        self,
+        vectors: np.ndarray,
+        scorer: Scorer | str = "dense_dot",
+        *,
+        k: int,
+        chunk_size: int,
+        use_kernel: bool = True,
+    ):
+        self.scorer = get_scorer(scorer) if isinstance(scorer, str) else scorer
+        if self.scorer.kind != "dense":
+            raise ValueError(f"scorer {self.scorer.name!r} is not dense")
+        self.k = k
+        self.chunk_size = chunk_size
+        self.use_kernel = use_kernel
+        self._vectors = jnp.asarray(vectors, jnp.float32)
+        if self._vectors.shape[0] % chunk_size:
+            raise ValueError(
+                f"{self._vectors.shape[0]} docs not divisible by chunk {chunk_size}"
+            )
+
+        scorer_, k_, chunk_, kern = self.scorer, k, chunk_size, use_kernel
+        vecs = self._vectors
+
+        @jax.jit
+        def _handle(q):
+            return scan.search_local(
+                q, vecs, scorer_, k=k_, chunk_size=chunk_, use_kernel=kern
+            )
+
+        self._handle = _handle
+
+    @property
+    def n_docs(self) -> int:
+        return int(self._vectors.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self._vectors.shape[1])
+
+    def search(self, q_block: np.ndarray) -> topk.TopKState:
+        return jax.block_until_ready(self._handle(jnp.asarray(q_block, jnp.float32)))

@@ -3,7 +3,7 @@ any chunking/ordering of the scan merges to the same top-k)."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import topk
 
