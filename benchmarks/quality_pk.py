@@ -16,6 +16,7 @@ import numpy as np
 from benchmarks.common import VOCAB, make_collection
 from repro.core import invindex, scan, scoring
 from repro.data import synthetic
+from repro.eval import precision_at_k
 
 
 def run(csv_rows: list):
@@ -29,13 +30,10 @@ def run(csv_rows: list):
     )
     _, idx_ids = invindex.search(index, queries, stats, k=20)
 
-    def p_at(ids, k):
-        return float(np.mean([qrels[i, ids[i, :k]].mean() for i in range(len(queries))]))
-
     chance = qrels.mean()
     for k in (5, 10, 20):
-        ps = p_at(np.asarray(state.ids), k)
-        pi = p_at(idx_ids, k)
+        ps = float(precision_at_k(np.asarray(state.ids), qrels, k).mean())
+        pi = float(precision_at_k(np.asarray(idx_ids), qrels, k).mean())
         csv_rows.append((f"quality_scan_p@{k}", ps, f"index={pi:.3f} chance={chance:.4f}"))
         assert abs(ps - pi) < 0.06, (k, ps, pi)
         assert ps > 10 * chance, (k, ps, chance)

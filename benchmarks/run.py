@@ -1,6 +1,7 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 """Benchmark harness: fig2 scaling (C1/C2), table1 LOC (C3), P@k quality
-(C4), corpus-prep throughput, dense-scan throughput, serve-mode latency.
+(C4), corpus-prep throughput, dense-scan throughput, serve-mode latency,
+experiment-engine models-per-pass amortization.
 Each module validates its paper claim with asserts and contributes CSV
 rows. Modules are imported and run independently: a failure (including an
 import error) in one benchmark is reported and the rest still run."""
@@ -18,6 +19,7 @@ MODULES = (
     "retrieval_scan",
     "fig2_scaling",
     "serve_latency",
+    "experiments_amortization",
 )
 
 

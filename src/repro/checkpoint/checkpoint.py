@@ -62,15 +62,35 @@ def save(ckpt_dir: str, step: int, tree) -> str:
     return final
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def all_steps(ckpt_dir: str) -> list[int]:
+    """Committed checkpoint steps (ascending); uncommitted .tmp dirs excluded."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(d.split("_")[1])
         for d in os.listdir(ckpt_dir)
         if d.startswith("step_") and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def prune(ckpt_dir: str, keep: int) -> list[int]:
+    """Delete all but the newest ``keep`` checkpoints; returns removed steps.
+
+    Bounds the disk footprint of segment-checkpointed scan jobs (one commit
+    per corpus segment) without ever touching the newest good step.
+    """
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    steps = all_steps(ckpt_dir)
+    drop = steps[:-keep] if len(steps) > keep else []
+    for s in drop:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))
+    return drop
 
 
 def restore(ckpt_dir: str, step: int, tree_like, *, shardings=None):

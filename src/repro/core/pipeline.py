@@ -33,6 +33,22 @@ def num_chunks(n: int, chunk_size: int) -> int:
     return -(-n // chunk_size)
 
 
+def segments(n: int, chunk_size: int, chunks_per_segment: int) -> list[tuple[int, int]]:
+    """Chunk-aligned ``[start, stop)`` row ranges for checkpointed folds.
+
+    A resumable scan job folds one segment at a time and checkpoints the
+    combiner state between segments; because every boundary is a chunk
+    boundary, the segmented fold replays the exact per-chunk ``fold_fn``
+    sequence of the unsegmented one (bit-identical resume, test-enforced).
+    """
+    if n % chunk_size:
+        raise ValueError(f"leading dim {n} not divisible by chunk_size {chunk_size}")
+    if chunks_per_segment < 1:
+        raise ValueError(f"chunks_per_segment must be >= 1, got {chunks_per_segment}")
+    step = chunk_size * chunks_per_segment
+    return [(a, min(a + step, n)) for a in range(0, n, step)]
+
+
 def next_pow2(n: int) -> int:
     """Smallest power of two >= n (>= 1). Shared by the kernel combiner's
     bitonic padding and the serve layer's batch buckets."""

@@ -7,6 +7,11 @@ HBM/VMEM is paid once for the whole query block.
 
 Layering:
   * :func:`search_local`  — fold over one device's corpus shard (pure JAX).
+  * :func:`search_local_multi` — same single pass, but folding a *stack* of
+    scorer variants (a model grid) into per-model top-k states: the corpus
+    chunk streams through HBM once for the whole grid, and for lexical
+    grids the term-frequency reduction is computed once per chunk and
+    shared (the experiment-side amortization mirroring claim C1).
   * :func:`search_sharded` — shard_map over the mesh: local search + the
     combiner-bounded top-k merge (`topk.merge_across`).
   * dense-path hot loop optionally dispatches to the Pallas fused
@@ -23,7 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import pipeline, topk
+from repro import compat
+from repro.core import pipeline, scoring, topk
 from repro.core.scoring import CollectionStats, Scorer
 
 
@@ -57,6 +63,67 @@ def search_local(
 
     def fold(state, chunk, start):
         scores = scorer.score_block(queries, chunk, stats)  # [n_q, chunk_size]
+        ids = offset + start + jnp.arange(scores.shape[-1], dtype=jnp.int32)
+        return topk.update(state, scores, jnp.broadcast_to(ids, scores.shape))
+
+    return pipeline.fold_chunks(docs, chunk_size, fold, state0)
+
+
+def search_local_multi(
+    queries: Any,
+    docs: Any,
+    scorers: tuple[Scorer, ...] | list[Scorer],
+    *,
+    k: int,
+    chunk_size: int,
+    stats: CollectionStats | None = None,
+    doc_id_offset: jax.Array | int = 0,
+    init_state: topk.TopKState | None = None,
+) -> topk.TopKState:
+    """Scan a corpus shard once, scoring a whole *grid* of models.
+
+    Returns a stacked :class:`topk.TopKState` with shapes
+    ``scores [n_models, n_q, k]`` / ``ids [n_models, n_q, k]`` — row ``m``
+    is bit-identical to ``search_local(..., scorer=scorers[m], ...)`` (the
+    per-row combiner fold is the same ``top_k`` over the same candidates).
+
+    All scorers must share a ``kind`` (they consume the same corpus
+    representation). For lexical grids the per-chunk
+    :func:`scoring.term_frequencies` reduction — the dominant cost of a
+    raw-token chunk — is computed once and shared by every variant.
+
+    ``init_state`` resumes the fold from a previously checkpointed state
+    (the scan-job runner in `repro.experiments.job`); associativity of the
+    combiner makes the segmented fold equal to the unsegmented one.
+    """
+    scorers = tuple(scorers)
+    if not scorers:
+        raise ValueError("need at least one scorer")
+    kinds = {s.kind for s in scorers}
+    if len(kinds) != 1:
+        raise ValueError(f"multi-scorer scan needs a single kind, got {sorted(kinds)}")
+    kind = kinds.pop()
+
+    n_q = jax.tree.leaves(queries)[0].shape[0]
+    state0 = init_state if init_state is not None else topk.init(k, (len(scorers), n_q))
+    if state0.scores.shape[:-1] != (len(scorers), n_q):
+        raise ValueError(
+            f"init_state batch shape {state0.scores.shape[:-1]} != ({len(scorers)}, {n_q})"
+        )
+    if state0.k != k:
+        # the fold truncates every block to state.k, so a mismatched init_state
+        # would silently override the requested depth
+        raise ValueError(f"init_state has k={state0.k}, requested k={k}")
+    offset = jnp.asarray(doc_id_offset, jnp.int32)
+
+    def fold(state, chunk, start):
+        tf = None
+        if kind == "lexical":
+            d_tokens, _ = chunk
+            tf = scoring.term_frequencies(queries, d_tokens)  # shared by the grid
+        scores = jnp.stack(
+            [s.score_block(queries, chunk, stats, tf=tf) for s in scorers]
+        )  # [n_models, n_q, chunk_size]
         ids = offset + start + jnp.arange(scores.shape[-1], dtype=jnp.int32)
         return topk.update(state, scores, jnp.broadcast_to(ids, scores.shape))
 
@@ -99,7 +166,7 @@ def search_sharded(
         # global shard index = flattened index over the sharding axes
         idx = 0
         for a in axis_names:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         state = search_local(
             queries,
             docs,

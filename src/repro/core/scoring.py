@@ -26,6 +26,7 @@ language model with a document-length prior, eq. of [Hiemstra 2001]:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -65,9 +66,15 @@ def hiemstra_lm(
     *,
     lam: float = 0.15,
     length_prior: bool = True,
+    tf: jax.Array | None = None,
 ) -> jax.Array:
-    """The paper's scorer: query-likelihood LM with length prior."""
-    tf = term_frequencies(q_tokens, d_tokens)  # [n_q, L_q, n_d]
+    """The paper's scorer: query-likelihood LM with length prior.
+
+    ``tf`` lets a multi-scorer scan share one :func:`term_frequencies`
+    reduction per corpus chunk across a whole grid of variants.
+    """
+    if tf is None:
+        tf = term_frequencies(q_tokens, d_tokens)  # [n_q, L_q, n_d]
     cf = jnp.asarray(stats.cf)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)  # [n_q, L_q]
     q_valid = (q_tokens != PAD_TOKEN) & (cf > 0)
     safe_cf = jnp.where(cf > 0, cf, 1.0)
@@ -94,9 +101,11 @@ def bm25(
     *,
     k1: float = 1.2,
     b: float = 0.75,
+    tf: jax.Array | None = None,
 ) -> jax.Array:
     """Okapi BM25 over the raw-token scan (a "new approach" in 5 lines)."""
-    tf = term_frequencies(q_tokens, d_tokens)
+    if tf is None:
+        tf = term_frequencies(q_tokens, d_tokens)
     df = jnp.asarray(stats.df)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)
     n = jnp.asarray(stats.n_docs).astype(jnp.float32)
     idf = jnp.log1p((n - df + 0.5) / (df + 0.5))
@@ -112,9 +121,12 @@ def tfidf(
     d_tokens: jax.Array,
     d_len: jax.Array,
     stats: CollectionStats,
+    *,
+    tf: jax.Array | None = None,
 ) -> jax.Array:
     """Plain ltc-style tf-idf, length-normalized."""
-    tf = term_frequencies(q_tokens, d_tokens)
+    if tf is None:
+        tf = term_frequencies(q_tokens, d_tokens)
     df = jnp.asarray(stats.df)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)
     n = jnp.asarray(stats.n_docs).astype(jnp.float32)
     idf = jnp.log((n + 1.0) / (df + 1.0))
@@ -142,15 +154,30 @@ def dense_cosine(q_vecs: jax.Array, d_vecs: jax.Array, eps: float = 1e-6) -> jax
 
 @dataclasses.dataclass(frozen=True)
 class Scorer:
-    """A retrieval approach = kind + block function (+ params)."""
+    """A retrieval approach = kind + block function (+ params).
+
+    ``params`` records keyword overrides bound onto ``fn`` (a grid point in
+    an experiment); ``base`` names the unparameterized scorer it came from.
+    """
 
     name: str
     kind: str  # "lexical" | "dense"
     fn: Callable
+    base: str | None = None
+    params: tuple[tuple[str, object], ...] = ()
 
-    def score_block(self, queries, doc_block, stats: CollectionStats | None = None):
+    def score_block(
+        self,
+        queries,
+        doc_block,
+        stats: CollectionStats | None = None,
+        *,
+        tf: jax.Array | None = None,
+    ):
         if self.kind == "lexical":
             d_tokens, d_len = doc_block
+            if tf is not None:
+                return self.fn(queries, d_tokens, d_len, stats, tf=tf)
             return self.fn(queries, d_tokens, d_len, stats)
         return self.fn(queries, doc_block)
 
@@ -169,3 +196,19 @@ def get_scorer(name: str) -> Scorer:
         return SCORERS[name]
     except KeyError:
         raise KeyError(f"unknown scorer {name!r}; available: {sorted(SCORERS)}") from None
+
+
+def make_variant(base: str, name: str | None = None, **params) -> Scorer:
+    """A grid point: ``base`` scorer with keyword parameters bound.
+
+    ``make_variant("bm25", k1=0.9, b=0.4)`` is a *new retrieval approach* in
+    the paper's sense — same block contract, new model — which is what lets
+    one corpus pass score a whole parameter grid (`scan.search_local_multi`).
+    """
+    b = get_scorer(base)
+    fn = functools.partial(b.fn, **params) if params else b.fn
+    if name is None:
+        name = base if not params else (
+            base + "(" + ",".join(f"{k}={v}" for k, v in sorted(params.items())) + ")"
+        )
+    return Scorer(name, b.kind, fn, base=base, params=tuple(sorted(params.items())))

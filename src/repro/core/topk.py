@@ -16,6 +16,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 NEG_INF = float("-inf")
 
 
@@ -40,6 +42,15 @@ def init(k: int, batch_shape: tuple = (), dtype=jnp.float32) -> TopKState:
         scores=jnp.full((*batch_shape, k), NEG_INF, dtype=dtype),
         ids=jnp.full((*batch_shape, k), -1, dtype=jnp.int32),
     )
+
+
+def valid_mask(state: TopKState) -> jax.Array:
+    """Boolean mask of occupied slots (corpus smaller than k leaves empties).
+
+    Empty slots carry ``(-inf, -1)`` sentinels; run-file writers and eval
+    must drop them rather than rank a nonexistent document.
+    """
+    return (state.ids >= 0) & (state.scores > NEG_INF)
 
 
 def update(state: TopKState, cand_scores: jax.Array, cand_ids: jax.Array) -> TopKState:
@@ -101,7 +112,7 @@ def merge_across_tree(state: TopKState, axis_name: str) -> TopKState:
     Requires the axis size to be a power of two. All shards end with the
     global state (butterfly/all-reduce pattern).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     if n & (n - 1):
         raise ValueError(f"tree merge requires power-of-two axis size, got {n}")
     idx = jax.lax.axis_index(axis_name)

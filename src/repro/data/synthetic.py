@@ -72,6 +72,29 @@ def make_queries(
     return q
 
 
+def _density_ranked(
+    corpus: Corpus, queries: np.ndarray, per_query: int, seed: int
+) -> list[np.ndarray]:
+    """Per query: the ``per_query`` densest matching docs, best first.
+
+    The single source of the synthetic gold standard — binary and graded
+    qrels both consume this ranking, which is what keeps
+    ``make_graded_qrels(...) > 0 == make_qrels(...)`` true by construction."""
+    rng = np.random.default_rng(seed)
+    lengths = np.maximum(corpus.lengths, 1)
+    ranked = []
+    for qi in range(queries.shape[0]):
+        terms = queries[qi][queries[qi] != PAD_TOKEN]
+        density = np.zeros(corpus.tokens.shape[0], np.float64)
+        for t in terms:
+            density += (corpus.tokens == t).sum(-1)
+        density = density / lengths
+        density += rng.normal(0, 1e-9, density.shape)  # tie-break
+        top = np.argsort(-density)[:per_query]
+        ranked.append(top[density[top] > 0])
+    return ranked
+
+
 def make_qrels(
     corpus: Corpus,
     queries: np.ndarray,
@@ -82,19 +105,27 @@ def make_qrels(
     """Synthetic relevance: for each query the docs with the highest raw
     query-term density are 'relevant' (a golden standard generated from the
     scoring-model family, per DESIGN C4 — sanity, not SOTA)."""
-    rng = np.random.default_rng(seed)
-    n_q = queries.shape[0]
-    qrels = np.zeros((n_q, corpus.tokens.shape[0]), bool)
-    lengths = np.maximum(corpus.lengths, 1)
-    for qi in range(n_q):
-        terms = queries[qi][queries[qi] != PAD_TOKEN]
-        density = np.zeros(corpus.tokens.shape[0], np.float64)
-        for t in terms:
-            density += (corpus.tokens == t).sum(-1)
-        density = density / lengths
-        density += rng.normal(0, 1e-9, density.shape)  # tie-break
-        top = np.argsort(-density)[:per_query]
-        qrels[qi, top[density[top] > 0]] = True
+    qrels = np.zeros((queries.shape[0], corpus.tokens.shape[0]), bool)
+    for qi, top in enumerate(_density_ranked(corpus, queries, per_query, seed)):
+        qrels[qi, top] = True
+    return qrels
+
+
+def make_graded_qrels(
+    corpus: Corpus,
+    queries: np.ndarray,
+    *,
+    per_query: int = 20,
+    max_grade: int = 3,
+    seed: int = 2,
+) -> np.ndarray:
+    """Graded relevance (0..max_grade) for NDCG: same density ranking as
+    :func:`make_qrels`, with grades assigned by rank band (denser ⇒ higher)."""
+    qrels = np.zeros((queries.shape[0], corpus.tokens.shape[0]), np.int8)
+    for qi, top in enumerate(_density_ranked(corpus, queries, per_query, seed)):
+        for rank, doc in enumerate(top):
+            band = rank * max_grade // max(len(top), 1)  # 0 = densest band
+            qrels[qi, doc] = max_grade - band
     return qrels
 
 
@@ -131,9 +162,16 @@ def make_dense_corpus(*, n_docs: int, dim: int, seed: int = 4) -> np.ndarray:
 def make_lm_batch(
     *, batch: int, seq_len: int, vocab: int, seed: int = 0, chunk: int = 0
 ) -> dict[str, np.ndarray]:
-    """Deterministic LM training batch keyed by (seed, chunk) for restarts."""
+    """Deterministic LM training batch keyed by (seed, chunk) for restarts.
+
+    Tokens are Zipf-distributed (like the corpora above): uniform tokens have
+    no learnable structure at all — loss starts at ln|V| and can only walk in
+    place — whereas a skewed unigram distribution gives training runs real
+    signal (the convergence tests in test_system assert on it)."""
     rng = np.random.default_rng((seed, chunk))
-    tokens = rng.integers(0, vocab, size=(batch, seq_len + 1), dtype=np.int64)
+    tokens = _zipf_tokens(rng, batch * (seq_len + 1), vocab, 1.2).reshape(
+        batch, seq_len + 1
+    )
     return {
         "tokens": tokens[:, :-1].astype(np.int32),
         "labels": tokens[:, 1:].astype(np.int32),
@@ -168,14 +206,22 @@ def make_recsys_batch(
     chunk: int = 0,
 ) -> dict[str, np.ndarray]:
     rng = np.random.default_rng((seed, chunk))
-    return {
-        "dense": rng.standard_normal((batch, n_dense)).astype(np.float32)
+    dense = (
+        rng.standard_normal((batch, n_dense)).astype(np.float32)
         if n_dense
-        else np.zeros((batch, 0), np.float32),
-        "sparse_ids": rng.integers(
-            0, vocab_per_field, size=(batch, n_sparse), dtype=np.int32
-        ),
-        "labels": rng.integers(0, 2, size=(batch,)).astype(np.float32),
+        else np.zeros((batch, 0), np.float32)
+    )
+    sparse_ids = rng.integers(0, vocab_per_field, size=(batch, n_sparse), dtype=np.int32)
+    # learnable labels from a fixed linear teacher over the dense features
+    # (plus a small per-field id-parity term): coin-flip labels would pin the
+    # achievable loss at ln 2 and make convergence tests meaningless
+    logit = dense @ np.linspace(-1.0, 1.0, n_dense) if n_dense else np.zeros(batch)
+    if n_sparse:
+        logit = logit + 0.5 * ((sparse_ids[:, 0] % 2) * 2 - 1)
+    return {
+        "dense": dense,
+        "sparse_ids": sparse_ids,
+        "labels": (logit > 0).astype(np.float32),
     }
 
 

@@ -1,0 +1,47 @@
+"""Batch experiment engine: grids, resumable scan jobs, lifecycle runner.
+
+MIREX's purpose is to *quickly test new retrieval approaches*; this package
+is the machinery that makes a whole grid of approaches one cheap batch:
+
+  * `grid`   — scorer-variant grids + the named-experiment registry;
+  * `job`    — chunk-checkpointed, kill/resume-bit-identical scan jobs
+               folding every grid point in a single corpus pass
+               (`core.scan.search_local_multi`);
+  * `runner` — prepare → scan → TREC run files → `repro.eval` report;
+  * `bench`  — the models-per-pass amortization curve
+               (``BENCH_experiments.json``).
+
+`launch/experiment.py` is the CLI over all of it.
+"""
+
+from repro.experiments import bench, grid, job, runner
+from repro.experiments.grid import (
+    EXPERIMENTS,
+    ExperimentSpec,
+    GridSpec,
+    expand_grids,
+    get_experiment,
+    parse_grid,
+    register_experiment,
+)
+from repro.experiments.job import ScanJobResult, read_progress, run_scan_job
+from repro.experiments.runner import prepare_collection, run_experiment
+
+__all__ = [
+    "bench",
+    "grid",
+    "job",
+    "runner",
+    "EXPERIMENTS",
+    "ExperimentSpec",
+    "GridSpec",
+    "expand_grids",
+    "get_experiment",
+    "parse_grid",
+    "register_experiment",
+    "ScanJobResult",
+    "read_progress",
+    "run_scan_job",
+    "prepare_collection",
+    "run_experiment",
+]

@@ -1,0 +1,164 @@
+"""Experiment orchestration: prepare → scan job → run files → eval report.
+
+One call runs the whole MIREX experiment lifecycle for a declared grid:
+
+  1. **prepare** — deterministic synthetic collection + collection-statistics
+     job (the paper's preprocessing MapReduce) + queries + graded qrels;
+  2. **scan** — one resumable multi-scorer corpus pass
+     (`job.run_scan_job`): every grid point shares the corpus stream;
+  3. **report** — per-model TREC run files, the `repro.eval` report card
+     (MAP / P@k / NDCG / MRR / recall), and paired-randomization
+     significance of every variant against the declared baseline.
+
+Everything is keyed by ``seed``, so a re-run (or a kill/resume, see
+`job.py`) regenerates byte-identical artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anchors, topk
+from repro.data import synthetic
+from repro.eval import evaluate_run, paired_randomization_test, trec
+from repro.experiments.grid import ExperimentSpec
+from repro.experiments.job import ScanJobResult, run_scan_job
+
+
+@dataclasses.dataclass(frozen=True)
+class Collection:
+    corpus: synthetic.Corpus
+    stats: Any  # CollectionStats of jnp arrays
+    queries: np.ndarray
+    qrels: np.ndarray  # graded [n_q, n_docs] int8
+
+
+def prepare_collection(spec: ExperimentSpec, *, seed: int = 0) -> Collection:
+    """The prepare stage: corpus, stats job, queries, graded qrels."""
+    corpus = synthetic.make_corpus(
+        n_docs=spec.n_docs, vocab=spec.vocab, max_len=spec.max_doc_len, seed=seed
+    )
+    stats = anchors.collection_stats(
+        jnp.asarray(corpus.tokens),
+        jnp.asarray(corpus.lengths),
+        vocab=spec.vocab,
+        chunk_size=min(spec.chunk_size, spec.n_docs),
+    )
+    queries = synthetic.make_queries(corpus, n_queries=spec.n_queries, seed=seed + 1)
+    qrels = synthetic.make_graded_qrels(corpus, queries, per_query=25, seed=seed + 2)
+    return Collection(corpus=corpus, stats=stats, queries=queries, qrels=qrels)
+
+
+def run_filename(variant: str) -> str:
+    """Filesystem-safe run-file name for a scorer variant."""
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", variant).strip("_") + ".run"
+
+
+def write_run_files(
+    out_dir: str, scorers, state: topk.TopKState, *, tag_prefix: str
+) -> dict[str, str]:
+    """One TREC run file per model from the stacked job state."""
+    os.makedirs(out_dir, exist_ok=True)
+    valid = np.asarray(topk.valid_mask(state))
+    ids = np.asarray(state.ids)
+    scores = np.asarray(state.scores)
+    paths = {}
+    for m, s in enumerate(scorers):
+        path = os.path.join(out_dir, run_filename(s.name))
+        trec.write_run(
+            path, ids[m], scores[m], run_tag=f"{tag_prefix}/{s.name}", valid=valid[m]
+        )
+        paths[s.name] = path
+    return paths
+
+
+def run_experiment(
+    spec: ExperimentSpec,
+    *,
+    out_dir: str,
+    seed: int = 0,
+    resume: bool = True,
+    fail_at_segment: int | None = None,
+    collection: Collection | None = None,
+) -> dict:
+    """Execute the full lifecycle; returns (and writes) the report dict.
+
+    Artifacts under ``out_dir``: ``runs/<variant>.run``, ``qrels.txt``,
+    ``ckpt/`` (segment checkpoints + progress manifest), ``report.json``.
+    """
+    # clamp eval cutoffs to the run depth up front — failing in evaluation
+    # after the whole scan job ran would discard all the work
+    if spec.k < max(spec.eval_ks):
+        ks = tuple(c for c in spec.eval_ks if c <= spec.k) or (spec.k,)
+        spec = dataclasses.replace(spec, eval_ks=ks)
+    coll = collection if collection is not None else prepare_collection(spec, seed=seed)
+    scorers = spec.scorers()
+    docs = (jnp.asarray(coll.corpus.tokens), jnp.asarray(coll.corpus.lengths))
+
+    job = run_scan_job(
+        jnp.asarray(coll.queries),
+        docs,
+        scorers,
+        k=spec.k,
+        chunk_size=spec.chunk_size,
+        segment_chunks=spec.segment_chunks,
+        stats=coll.stats,
+        ckpt_dir=os.path.join(out_dir, "ckpt"),
+        resume=resume,
+        fail_at_segment=fail_at_segment,
+    )
+
+    run_paths = write_run_files(
+        os.path.join(out_dir, "runs"), scorers, job.state, tag_prefix=spec.name
+    )
+    trec.write_qrels(os.path.join(out_dir, "qrels.txt"), coll.qrels)
+
+    reports = {}
+    per_query_ap = {}
+    for m, s in enumerate(scorers):
+        rep = evaluate_run(np.asarray(job.state.ids)[m], coll.qrels, ks=spec.eval_ks)
+        reports[s.name] = rep["aggregate"]
+        per_query_ap[s.name] = rep["per_query"]["ap"]
+
+    significance = {}
+    baseline = spec.baseline if spec.baseline in per_query_ap else scorers[0].name
+    for name, ap in per_query_ap.items():
+        if name == baseline:
+            continue
+        res = paired_randomization_test(ap, per_query_ap[baseline], seed=seed)
+        significance[name] = {
+            "vs": baseline,
+            "metric": "ap",
+            "diff": res.diff,
+            "p_value": res.p_value,
+        }
+
+    report = {
+        "experiment": spec.name,
+        "seed": seed,
+        "n_docs": spec.n_docs,
+        "n_queries": spec.n_queries,
+        "k": spec.k,
+        "models": [s.name for s in scorers],
+        "job": {
+            "segments_total": job.segments_total,
+            "segments_run": job.segments_run,
+            "resumed_from": job.resumed_from,
+        },
+        "runs": run_paths,
+        "metrics": reports,
+        "baseline": baseline,
+        "significance": significance,
+    }
+    with open(os.path.join(out_dir, "report.json"), "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report

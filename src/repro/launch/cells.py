@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import compat
 from repro.configs import get_config, input_specs, shapes_for
 from repro.configs.base import GNNConfig, MirexConfig, RecsysConfig, TransformerConfig
 from repro.core import scoring, topk
@@ -317,7 +318,7 @@ def _recsys_cell(arch: str, shape_name: str, mesh: Mesh, rules: AxisRules) -> Ce
     def local_retrieve(params, user_batch, cand_ids):
         idx = 0
         for a in rules.all_axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         if cfg.variant == "dcn-v2":
             scores = recsys.score_block_dcn(params, user_batch, cand_ids, cfg)
         else:
@@ -393,7 +394,7 @@ def _mirex_cell(arch: str, shape_name: str, mesh: Mesh, rules: AxisRules) -> Cel
         def local_scan(q_tokens, d_tokens, d_len, stats):
             idx = 0
             for a in rules.all_axes:
-                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
 
             # lexical chunk: bounded by the [q_chunk, L_q, chunk, L_d]
             # match tensor and by the per-shard doc count
@@ -441,7 +442,7 @@ def _mirex_cell(arch: str, shape_name: str, mesh: Mesh, rules: AxisRules) -> Cel
     def local_dense(q_vecs, d_vecs):
         idx = 0
         for a in rules.all_axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         state = search_local(
             q_vecs, d_vecs, scoring.get_scorer("dense_dot"),
             k=k, chunk_size=min(cfg.chunk_size, n_loc), doc_id_offset=idx * n_loc,

@@ -1,0 +1,148 @@
+"""Experiment driver: declare a grid, run the lifecycle, print the report.
+
+    # a registered experiment (see repro/experiments/grid.py)
+    PYTHONPATH=src python -m repro.launch.experiment --experiment bm25-grid
+
+    # or an ad-hoc grid: base:param=v1|v2,... (repeatable)
+    PYTHONPATH=src python -m repro.launch.experiment \
+        --grid "bm25:k1=0.9|1.2,b=0.4|0.75" --grid ql_lm --n-docs 4096
+
+The lifecycle is prepare → scan job → run files → eval (see
+`repro.experiments.runner`). The scan job checkpoints per corpus segment
+under ``<out>/ckpt`` — kill the process mid-run and re-invoke with the same
+``--out`` to resume bit-identically (``--fail-at-segment`` injects the kill
+for testing). ``--bench`` additionally sweeps the models-per-pass
+amortization curve into ``BENCH_experiments.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import scoring
+from repro.experiments import bench as exp_bench
+from repro.experiments import grid as exp_grid
+from repro.experiments import runner
+
+
+def _spec_from_args(args) -> exp_grid.ExperimentSpec:
+    if args.experiment:
+        if args.grid:
+            raise SystemExit(
+                "--experiment and --grid are mutually exclusive; add the grid "
+                "to the registry (repro/experiments/grid.py) or run it ad-hoc"
+            )
+        spec = exp_grid.get_experiment(args.experiment)
+    else:
+        if not args.grid:
+            raise SystemExit("need --experiment or at least one --grid")
+        spec = exp_grid.ExperimentSpec(
+            name="adhoc", grids=tuple(exp_grid.parse_grid(g) for g in args.grid)
+        )
+    overrides = {
+        k: v
+        for k, v in (
+            ("n_docs", args.n_docs),
+            ("n_queries", args.n_queries),
+            ("k", args.k),
+            ("chunk_size", args.chunk_size),
+            ("segment_chunks", args.segment_chunks),
+        )
+        if v is not None
+    }
+    # (a small --k is fine: run_experiment clamps eval_ks to the run depth)
+    return dataclasses.replace(spec, **overrides) if overrides else spec
+
+
+def print_report(report: dict) -> None:
+    job = report["job"]
+    resumed = f", resumed from segment {job['resumed_from']}" if job["resumed_from"] else ""
+    print(
+        f"== experiment {report['experiment']}: {len(report['models'])} models, "
+        f"one pass over {report['n_docs']} docs × {report['n_queries']} queries "
+        f"({job['segments_total']} checkpointed segments{resumed}) =="
+    )
+    metric_names = list(next(iter(report["metrics"].values())))
+    header = "model".ljust(34) + "".join(m.rjust(10) for m in metric_names)
+    print(header)
+    for model, agg in report["metrics"].items():
+        sig = report["significance"].get(model)
+        star = " *" if sig and sig["p_value"] < 0.05 else ""
+        print(
+            model.ljust(34)
+            + "".join(f"{agg[m]:10.4f}" for m in metric_names)
+            + star
+        )
+    base = report["baseline"]
+    print(f"(* = p<0.05 vs baseline {base}, paired randomization on AP)")
+    for model, sig in report["significance"].items():
+        print(f"  {model}: ΔAP={sig['diff']:+.4f}  p={sig['p_value']:.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--experiment", default=None,
+                    help=f"registered experiment: {sorted(exp_grid.EXPERIMENTS)}")
+    ap.add_argument("--grid", action="append", default=[],
+                    help='ad-hoc grid "base:param=v1|v2,..." (repeatable)')
+    ap.add_argument("--out", default="results/experiments",
+                    help="artifact dir (runs/, qrels.txt, ckpt/, report.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-docs", type=int, default=None)
+    ap.add_argument("--n-queries", type=int, default=None)
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--chunk-size", type=int, default=None)
+    ap.add_argument("--segment-chunks", type=int, default=None,
+                    help="corpus chunks per checkpoint segment")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore existing segment checkpoints")
+    ap.add_argument("--fail-at-segment", type=int, default=None,
+                    help="inject a failure after this segment commits (testing)")
+    ap.add_argument("--bench", action="store_true",
+                    help="also sweep the models-per-pass amortization curve")
+    ap.add_argument("--bench-sizes", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--bench-out", default="BENCH_experiments.json")
+    args = ap.parse_args()
+
+    spec = _spec_from_args(args)
+    out_dir = args.out if args.experiment is None else f"{args.out}/{spec.name}"
+    coll = runner.prepare_collection(spec, seed=args.seed)  # shared with --bench
+    report = runner.run_experiment(
+        spec,
+        out_dir=out_dir,
+        seed=args.seed,
+        resume=not args.no_resume,
+        fail_at_segment=args.fail_at_segment,
+        collection=coll,
+    )
+    print_report(report)
+    print(f"wrote {out_dir}/report.json")
+
+    if args.bench:
+        # bench grid: enough QL-LM smoothing points for the largest size
+        lams = [0.05 + 0.9 * i / max(args.bench_sizes) for i in range(max(args.bench_sizes))]
+        scorers = [scoring.make_variant("ql_lm", lam=round(l, 4)) for l in lams]
+        payload = exp_bench.amortization_curve(
+            jnp.asarray(coll.queries),
+            (jnp.asarray(coll.corpus.tokens), jnp.asarray(coll.corpus.lengths)),
+            scorers,
+            k=spec.k,
+            chunk_size=spec.chunk_size,
+            stats=coll.stats,
+            sizes=tuple(args.bench_sizes),
+        )
+        path = exp_bench.write_bench_json(payload, args.bench_out)
+        for pt in payload["curve"]:
+            speedup = pt.get("speedup_vs_independent")
+            extra = f"  {speedup:5.2f}x vs independent passes" if speedup else ""
+            print(f"  {pt['models']:3d} models/pass: {pt['wall_s']*1e3:8.1f} ms "
+                  f"({pt['s_per_model']*1e3:7.1f} ms/model){extra}")
+        print(f"amortization {payload.get('amortization_x', 1.0):.2f}x "
+              f"({payload['sizes'][0]} -> {payload['sizes'][-1]} models); wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

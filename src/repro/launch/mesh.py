@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import set_mesh  # noqa: F401  (re-export + installs jax.set_mesh shim)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips with a leading "pod"

@@ -25,7 +25,7 @@ from repro.configs import reduced_config
 from repro.core import anchors
 from repro.data import synthetic
 from repro.distributed.sharding import rules_for_mesh
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, set_mesh
 from repro.models import transformer as tfm
 from repro.serve import LexicalSession, RetrievalService
 from repro.serve.bench import sweep_batch_sizes, write_bench_json
@@ -100,7 +100,7 @@ def serve_decode(n_tokens: int, arch: str = "gemma2-2b", batch: int = 4):
     mesh = make_test_mesh(1, 1)
     rules = rules_for_mesh(mesh)
     params = tfm.init_params(cfg, jax.random.key(0))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         ctx = tfm.make_context(cfg, mesh, rules, tokens_per_shard=batch)
         step = tfm.make_serve_step(ctx, batch=batch)
         cache = tfm.init_cache(cfg, batch, n_tokens + 8)

@@ -29,7 +29,7 @@ from repro.configs.base import RecsysConfig, TransformerConfig
 from repro.data import synthetic
 from repro.data.loader import ShardedBatchLoader
 from repro.distributed.sharding import rules_for_mesh
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, set_mesh
 from repro.models import recsys as recsys_lib
 from repro.models import transformer as tfm
 from repro.optim import compress
@@ -142,7 +142,7 @@ def train(
     if ckpt_dir and resume:
         latest = ckpt.latest_step(ckpt_dir)
         if latest is not None:
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 params = init(jax.random.key(seed))
                 opt = adamw_init(params, jnp.dtype(getattr(cfg, "opt_dtype", "float32")))
                 ef = compress.ef_init(params) if grad_compress else jnp.zeros(())
@@ -151,14 +151,14 @@ def train(
                 params, opt, ef = tree["params"], tree["opt"], tree["ef"]
             start_step = latest
     if params is None:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             params = init(jax.random.key(seed))
             opt = adamw_init(params, jnp.dtype(getattr(cfg, "opt_dtype", "float32")))
             ef = compress.ef_init(params) if grad_compress else jnp.zeros(())
 
     jitted = jax.jit(train_step, donate_argnums=(0, 1, 2))
     history = []
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for step in range(start_step, steps):
             if fail_at_step is not None and step == fail_at_step:
                 raise RuntimeError(f"injected failure at step {step}")

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import compat
 from repro.models.common import softcap
 
 NEG = -1e30
@@ -185,7 +186,7 @@ def decode_attend_seqsharded(
         s_loc = k_loc.shape[1]
         idx = 0
         for a in seq_axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         pos_loc = idx * s_loc + jnp.arange(s_loc)
         # cache term: strictly pos < t (position t lives in kn/vn)
         m, l, o = _partial_attend(

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import compat
 from repro.configs.base import GNNConfig
 from repro.distributed.sharding import AxisRules
 from repro.models.common import init_dense
@@ -262,10 +263,10 @@ def make_sharded_full_graph(mesh: Mesh, rules: AxisRules, cfg: GNNConfig, *, mod
     def local(params, x, src, dst):
         n_shards = 1
         for a in axes:
-            n_shards *= jax.lax.axis_size(a)
+            n_shards *= compat.axis_size(a)
         idx = 0
         for a in axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         n = x.shape[0]
         n_loc = n // n_shards
         h = jax.nn.relu(x @ params["w_in"] + params["b_in"])

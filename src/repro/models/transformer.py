@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import compat
 from repro.configs.base import TransformerConfig
 from repro.distributed.sharding import AxisRules
 from repro.models import moe as moe_lib
@@ -299,7 +300,7 @@ def forward_hidden(params: dict, tokens: jax.Array, ctx: ModelContext):
         # hoists the conversion of loop-invariant weight stacks out of the
         # while loop (full f32 copies of every stacked weight — 5.6 GiB on
         # gemma2-27b). The barrier keeps the convert per-slice. No-op on TPU.
-        lp = jax.lax.optimization_barrier(lp)
+        lp = compat.optimization_barrier(lp)
         x = x + _attn_block(x, lp, cfg, window_active=window_active,
                             mesh=mesh, rules=rules, attn_tp=attn_tp,
                             seq_spec=carry_spec)
@@ -414,8 +415,10 @@ def make_loss_fn(ctx: ModelContext, aux_weight: float = 0.01, chunk: int = 256):
         body = jax.checkpoint(
             one_chunk, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
         )
-        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
-        return jax.lax.pmean(total / (b * s), dp)
+        # carry is [1], not scalar: rank-0 scan carries inside shard_map hit
+        # a transpose _SpecError on the pinned JAX (bisected in PR 2)
+        total, _ = jax.lax.scan(body, jnp.zeros((1,), jnp.float32), (xc, lc))
+        return jax.lax.pmean(total[0] / (b * s), dp)
 
     xent = shard_map(
         local_xent,
@@ -491,7 +494,7 @@ def make_serve_step(ctx: ModelContext, *, batch: int):
         def layer(x, xs):
             lp, window_active, k_cache, v_cache = xs
             # see forward_hidden: block hoisted f32 copies of weights+cache
-            lp, k_cache, v_cache = jax.lax.optimization_barrier((lp, k_cache, v_cache))
+            lp, k_cache, v_cache = compat.optimization_barrier((lp, k_cache, v_cache))
             y = rms_norm(x, lp["attn_norm"], one_plus=cfg.rms_one_plus)
             q = jnp.einsum("bd,dh->bh", y, lp["wq"]).reshape(b, h, hd)
             kn = jnp.einsum("bd,dh->bh", y, lp["wk"]).reshape(b, kv, hd)
@@ -551,7 +554,7 @@ def make_prefill_step(ctx: ModelContext):
 
         def layer(x, xs):
             lp, window_active = xs
-            lp = jax.lax.optimization_barrier(lp)  # see forward_hidden
+            lp = compat.optimization_barrier(lp)  # see forward_hidden
             o, (k, v) = _attn_block(x, lp, cfg, window_active=window_active, kv_out=True,
                                     mesh=mesh, rules=rules, attn_tp=attn_tp,
                                     seq_spec=carry_spec)

@@ -35,6 +35,20 @@ def test_atomic_commit_no_tmp_left(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 2
 
 
+def test_prune_keeps_newest(tmp_path):
+    for step in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), step, _tree())
+    assert ckpt.all_steps(str(tmp_path)) == [1, 2, 3, 4]
+    removed = ckpt.prune(str(tmp_path), keep=2)
+    assert removed == [1, 2]
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4]
+    assert ckpt.prune(str(tmp_path), keep=2) == []  # idempotent
+    ckpt.restore(str(tmp_path), 4, _tree())  # survivors still loadable
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    with pytest.raises(ValueError, match="keep"):
+        ckpt.prune(str(tmp_path), keep=0)
+
+
 def test_structure_mismatch_detected(tmp_path):
     ckpt.save(str(tmp_path), 1, _tree())
     wrong = {"a": jnp.zeros((3, 4)), "nested": {"c": jnp.zeros((5,))}}

@@ -1,0 +1,152 @@
+"""repro.eval: metrics against hand-computed values, TREC I/O, significance."""
+
+import numpy as np
+import pytest
+
+from repro.eval import metrics, significance, trec
+
+# Hand-worked example, 2 queries × 8 docs, run depth 4.
+#   q0 ranking [0, 1, 2, 3]; relevant docs {0, 2, 5} (grades 3, 1, 2)
+#   q1 ranking [3, 4, 5, 0]; relevant docs {4}    (grade 1)
+RUN = np.array([[0, 1, 2, 3], [3, 4, 5, 0]])
+QRELS = np.zeros((2, 8), np.int8)
+QRELS[0, 0], QRELS[0, 2], QRELS[0, 5] = 3, 1, 2
+QRELS[1, 4] = 1
+BINARY = (QRELS > 0).astype(np.int8)
+
+
+def test_precision_at_k_hand_computed():
+    # q0: top-2 = [rel, not] -> 1/2; q1: top-2 = [not, rel] -> 1/2
+    np.testing.assert_allclose(metrics.precision_at_k(RUN, QRELS, 2), [0.5, 0.5])
+    # q0: [rel, not, rel, not] -> 2/4; q1: [not, rel, not, not] -> 1/4
+    np.testing.assert_allclose(metrics.precision_at_k(RUN, QRELS, 4), [0.5, 0.25])
+
+
+def test_recall_at_k_hand_computed():
+    # q0 has 3 relevant, 2 retrieved in top-4; q1 has 1, retrieved
+    np.testing.assert_allclose(metrics.recall_at_k(RUN, QRELS, 4), [2 / 3, 1.0])
+
+
+def test_average_precision_hand_computed():
+    # q0: hits at ranks 1, 3 -> (1/1 + 2/3) / 3 relevant = 5/9
+    # q1: hit at rank 2 -> (1/2) / 1 = 1/2
+    np.testing.assert_allclose(
+        metrics.average_precision(RUN, QRELS), [5 / 9, 1 / 2]
+    )
+
+
+def test_reciprocal_rank_hand_computed():
+    np.testing.assert_allclose(metrics.reciprocal_rank(RUN, QRELS), [1.0, 0.5])
+
+
+def test_ndcg_hand_computed():
+    # q0 gains at ranks 1..4: 2^3-1, 0, 2^1-1, 0 -> DCG = 7/log2(2) + 1/log2(4)
+    # ideal grades [3, 2, 1] -> IDCG = 7/log2(2) + 3/log2(3) + 1/log2(4)
+    dcg0 = 7.0 + 1.0 / 2.0
+    idcg0 = 7.0 + 3.0 / np.log2(3.0) + 1.0 / 2.0
+    # q1: gain 1 at rank 2 -> DCG = 1/log2(3); ideal -> 1/log2(2)
+    dcg1 = 1.0 / np.log2(3.0)
+    np.testing.assert_allclose(
+        metrics.ndcg_at_k(RUN, QRELS, 4), [dcg0 / idcg0, dcg1], rtol=1e-12
+    )
+
+
+def test_ndcg_run_shallower_than_k():
+    # depth-3 run, k=5: missing ranks contribute no gain, ideal still uses k
+    run = np.array([[0, 1, 2], [3, 4, 5]])
+    got = metrics.ndcg_at_k(run, QRELS, 5)
+    full = metrics.ndcg_at_k(RUN, QRELS, 4)
+    assert got.shape == (2,)
+    assert 0.0 < got[0] <= full[0]  # q0 loses nothing (its 4th rank had no gain)
+
+
+def test_perfect_ranking_is_one():
+    run = np.array([[0, 5, 2, 1]])  # q0's docs in descending-grade order
+    assert metrics.ndcg_at_k(run, QRELS[:1], 4)[0] == pytest.approx(1.0)
+    run_bin = np.array([[0, 2, 5, 7]])
+    assert metrics.average_precision(run_bin, BINARY[:1])[0] == pytest.approx(1.0)
+
+
+def test_empty_slots_and_unjudged_queries():
+    run = np.array([[0, -1, -1, -1], [-1, -1, -1, -1]])
+    p = metrics.precision_at_k(run, QRELS, 4)
+    np.testing.assert_allclose(p, [0.25, 0.0])  # -1 slots never count as hits
+    no_rel = np.zeros((2, 8), np.int8)
+    assert metrics.average_precision(RUN, no_rel).tolist() == [0.0, 0.0]
+    assert metrics.reciprocal_rank(RUN, no_rel).tolist() == [0.0, 0.0]
+    assert metrics.ndcg_at_k(RUN, no_rel, 4).tolist() == [0.0, 0.0]
+
+
+def test_evaluate_run_aggregates():
+    rep = metrics.evaluate_run(RUN, QRELS, ks=(2, 4))
+    assert rep["aggregate"]["map"] == pytest.approx((5 / 9 + 1 / 2) / 2)
+    assert rep["aggregate"]["mrr"] == pytest.approx(0.75)
+    assert rep["aggregate"]["p@2"] == pytest.approx(0.5)
+    assert set(rep["per_query"]) == {
+        "ap", "rr", "p@2", "recall@2", "ndcg@2", "p@4", "recall@4", "ndcg@4",
+    }
+    with pytest.raises(ValueError, match="exceeds run depth"):
+        metrics.evaluate_run(RUN, QRELS, ks=(5,))
+
+
+def test_trec_run_roundtrip(tmp_path):
+    scores = np.array([[4.0, 3.5, 2.25, -1.125], [9.0, 8.5, 0.1, -3.75]])
+    path = str(tmp_path / "a.run")
+    trec.write_run(path, RUN, scores, run_tag="test/a")
+    ids, sc, tag = trec.read_run(path)
+    np.testing.assert_array_equal(ids, RUN)
+    np.testing.assert_array_equal(sc, scores)
+    assert tag == "test/a"
+
+
+def test_trec_run_valid_mask_roundtrip(tmp_path):
+    scores = np.array([[4.0, 3.5, 2.0, 1.0], [9.0, 8.5, 7.0, 6.0]])
+    valid = np.array([[True, True, False, False], [True, True, True, True]])
+    path = str(tmp_path / "b.run")
+    trec.write_run(path, RUN, scores, run_tag="t", valid=valid)
+    ids, sc, _ = trec.read_run(path)
+    assert ids[0].tolist() == [0, 1, -1, -1]  # masked slots -> empty sentinels
+    assert sc[0][2] == -np.inf
+    np.testing.assert_array_equal(ids[1], RUN[1])
+
+
+def test_trec_write_deterministic(tmp_path):
+    scores = np.array([[1 / 3, 0.1, 0.07, 1e-17], [2.0, 1.0, 0.5, 0.25]])
+    a, b = str(tmp_path / "a.run"), str(tmp_path / "b.run")
+    trec.write_run(a, RUN, scores, run_tag="t")
+    trec.write_run(b, RUN, scores.copy(), run_tag="t")
+    assert open(a, "rb").read() == open(b, "rb").read()
+
+
+def test_qrels_roundtrip(tmp_path):
+    path = str(tmp_path / "qrels.txt")
+    trec.write_qrels(path, QRELS)
+    back = trec.read_qrels(path, n_queries=2, n_docs=8)
+    np.testing.assert_array_equal(back, QRELS)
+
+
+def test_significance_identical_runs():
+    a = np.array([0.2, 0.4, 0.6, 0.8])
+    res = significance.paired_randomization_test(a, a.copy(), n_permutations=500)
+    assert res.diff == 0.0
+    assert res.p_value == pytest.approx(1.0)
+
+
+def test_significance_detects_dominant_system():
+    rng = np.random.default_rng(0)
+    b = rng.uniform(0.2, 0.4, size=50)
+    a = b + 0.2  # uniformly better
+    res = significance.paired_randomization_test(a, b, n_permutations=2000, seed=1)
+    assert res.diff == pytest.approx(0.2)
+    assert res.p_value < 0.01
+    # symmetric: swapping systems flips the sign, not the p-value
+    rev = significance.paired_randomization_test(b, a, n_permutations=2000, seed=1)
+    assert rev.diff == pytest.approx(-0.2)
+    assert rev.p_value == res.p_value
+
+
+def test_significance_validates_input():
+    with pytest.raises(ValueError):
+        significance.paired_randomization_test(np.zeros(3), np.zeros(4))
+    with pytest.raises(ValueError):
+        significance.paired_randomization_test(np.zeros(0), np.zeros(0))

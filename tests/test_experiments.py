@@ -1,0 +1,287 @@
+"""Batch experiment engine: multi-scorer parity, resumable jobs, lifecycle."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anchors, scan, scoring, topk
+from repro.data import synthetic
+from repro.experiments import bench as exp_bench
+from repro.experiments import grid as exp_grid
+from repro.experiments import job as exp_job
+from repro.experiments import runner
+
+VOCAB = 2048
+N_DOCS = 512
+CHUNK = 128
+K = 10
+
+
+@pytest.fixture(scope="module")
+def collection():
+    corpus = synthetic.make_corpus(n_docs=N_DOCS, vocab=VOCAB, max_len=32, seed=0)
+    stats = anchors.collection_stats(
+        jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths), vocab=VOCAB,
+        chunk_size=CHUNK,
+    )
+    queries = jnp.asarray(synthetic.make_queries(corpus, n_queries=8, seed=1))
+    docs = (jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths))
+    return corpus, stats, queries, docs
+
+
+GRID_5 = (
+    ("ql_lm", {}),
+    ("ql_lm", {"lam": 0.5}),
+    ("ql_lm", {"length_prior": False}),
+    ("bm25", {}),
+    ("bm25", {"k1": 0.9, "b": 0.4}),
+)
+
+
+def test_multi_scorer_parity_vs_independent_passes(collection):
+    """One pass over a 5-variant grid == 5 independent single-scorer scans."""
+    _, stats, queries, docs = collection
+    scorers = [scoring.make_variant(b, **p) for b, p in GRID_5]
+    multi = scan.search_local_multi(
+        queries, docs, scorers, k=K, chunk_size=CHUNK, stats=stats
+    )
+    assert multi.scores.shape == (len(scorers), queries.shape[0], K)
+    for m, s in enumerate(scorers):
+        single = scan.search_local(
+            queries, docs, s, k=K, chunk_size=CHUNK, stats=stats
+        )
+        np.testing.assert_array_equal(
+            np.asarray(multi.ids)[m], np.asarray(single.ids), err_msg=s.name
+        )
+        np.testing.assert_array_equal(
+            np.asarray(multi.scores)[m], np.asarray(single.scores), err_msg=s.name
+        )
+
+
+def test_multi_scorer_parity_dense():
+    q = jnp.asarray(synthetic.make_dense_corpus(n_docs=16, dim=32, seed=0))
+    d = jnp.asarray(synthetic.make_dense_corpus(n_docs=256, dim=32, seed=1))
+    scorers = [scoring.get_scorer("dense_dot"), scoring.get_scorer("dense_cosine")]
+    multi = scan.search_local_multi(q, d, scorers, k=K, chunk_size=64)
+    for m, s in enumerate(scorers):
+        single = scan.search_local(q, d, s, k=K, chunk_size=64)
+        np.testing.assert_array_equal(np.asarray(multi.ids)[m], np.asarray(single.ids))
+
+
+def test_multi_scorer_rejects_mixed_kinds(collection):
+    _, stats, queries, docs = collection
+    with pytest.raises(ValueError, match="single kind"):
+        scan.search_local_multi(
+            queries, docs,
+            [scoring.get_scorer("ql_lm"), scoring.get_scorer("dense_dot")],
+            k=K, chunk_size=CHUNK, stats=stats,
+        )
+    with pytest.raises(ValueError, match="at least one"):
+        scan.search_local_multi(queries, docs, [], k=K, chunk_size=CHUNK)
+    with pytest.raises(ValueError, match="init_state has k"):
+        scan.search_local_multi(
+            queries, docs, [scoring.get_scorer("ql_lm")], k=K, chunk_size=CHUNK,
+            stats=stats, init_state=topk.init(K + 1, (1, queries.shape[0])),
+        )
+
+
+def test_scan_job_kill_resume_bit_identical(collection, tmp_path):
+    """A job killed at a chunk/segment boundary resumes to bit-identical
+    state and a byte-identical TREC run file."""
+    _, stats, queries, docs = collection
+    scorers = [scoring.make_variant(b, **p) for b, p in GRID_5[:4]]
+    kw = dict(k=K, chunk_size=CHUNK, segment_chunks=1, stats=stats)
+
+    clean = exp_job.run_scan_job(
+        queries, docs, scorers, ckpt_dir=str(tmp_path / "a"), **kw
+    )
+    assert clean.segments_total == N_DOCS // CHUNK
+    assert clean.segments_run == clean.segments_total
+
+    with pytest.raises(RuntimeError, match="injected failure"):
+        exp_job.run_scan_job(
+            queries, docs, scorers, ckpt_dir=str(tmp_path / "b"),
+            fail_at_segment=1, **kw
+        )
+    prog = exp_job.read_progress(str(tmp_path / "b"))
+    assert prog["shards"]["0"]["segments_done"] == 2  # committed before the kill
+    assert not prog["shards"]["0"]["complete"]
+
+    resumed = exp_job.run_scan_job(
+        queries, docs, scorers, ckpt_dir=str(tmp_path / "b"), **kw
+    )
+    assert resumed.resumed_from == 2
+    assert resumed.segments_run == clean.segments_total - 2
+    np.testing.assert_array_equal(
+        np.asarray(clean.state.scores), np.asarray(resumed.state.scores)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(clean.state.ids), np.asarray(resumed.state.ids)
+    )
+
+    # artifact-level: byte-identical run files
+    pa = runner.write_run_files(str(tmp_path / "runs_a"), scorers, clean.state, tag_prefix="t")
+    pb = runner.write_run_files(str(tmp_path / "runs_b"), scorers, resumed.state, tag_prefix="t")
+    for name in pa:
+        assert open(pa[name], "rb").read() == open(pb[name], "rb").read()
+
+    # a re-run of a complete job is a no-op (idempotent)
+    again = exp_job.run_scan_job(
+        queries, docs, scorers, ckpt_dir=str(tmp_path / "b"), **kw
+    )
+    assert again.segments_run == 0
+    np.testing.assert_array_equal(np.asarray(again.state.ids), np.asarray(clean.state.ids))
+
+
+def test_scan_job_rejects_foreign_checkpoint(collection, tmp_path):
+    """Resume must not silently adopt a checkpoint from a different job,
+    even when the combiner state shapes match exactly."""
+    _, stats, queries, docs = collection
+    scorers = [scoring.get_scorer("ql_lm"), scoring.get_scorer("bm25")]
+    kw = dict(k=K, chunk_size=CHUNK, segment_chunks=2, stats=stats)
+    exp_job.run_scan_job(queries, docs, scorers, ckpt_dir=str(tmp_path / "c"), **kw)
+
+    other_corpus = synthetic.make_corpus(n_docs=N_DOCS, vocab=VOCAB, max_len=32, seed=9)
+    other_docs = (jnp.asarray(other_corpus.tokens), jnp.asarray(other_corpus.lengths))
+    with pytest.raises(ValueError, match="different job"):
+        exp_job.run_scan_job(
+            queries, other_docs, scorers, ckpt_dir=str(tmp_path / "c"), **kw
+        )
+    with pytest.raises(ValueError, match="different job"):
+        exp_job.run_scan_job(
+            queries, docs, scorers[:1], ckpt_dir=str(tmp_path / "c"),
+            k=K, chunk_size=CHUNK, segment_chunks=2, stats=stats,
+        )
+    # a different segmentation geometry must also be rejected: the checkpoint
+    # step counts *segments*, so reinterpreting it would skip/double-fold rows
+    with pytest.raises(ValueError, match="different job"):
+        exp_job.run_scan_job(
+            queries, docs, scorers, ckpt_dir=str(tmp_path / "c"),
+            k=K, chunk_size=CHUNK, segment_chunks=1, stats=stats,
+        )
+    # resume=False starts clean instead
+    fresh = exp_job.run_scan_job(
+        queries, other_docs, scorers, ckpt_dir=str(tmp_path / "c"),
+        resume=False, **kw
+    )
+    assert fresh.resumed_from == 0
+    assert fresh.segments_run == fresh.segments_total
+
+
+def test_scan_job_matches_unsegmented_scan(collection):
+    _, stats, queries, docs = collection
+    scorers = [scoring.get_scorer("ql_lm"), scoring.get_scorer("bm25")]
+    res = exp_job.run_scan_job(
+        queries, docs, scorers, k=K, chunk_size=CHUNK, segment_chunks=2,
+        stats=stats, ckpt_dir=None,
+    )
+    direct = scan.search_local_multi(
+        queries, docs, scorers, k=K, chunk_size=CHUNK, stats=stats
+    )
+    np.testing.assert_array_equal(np.asarray(res.state.ids), np.asarray(direct.ids))
+    # jitted segment folds vs the eager whole-corpus fold fuse differently on
+    # XLA:CPU — rankings are exact, scores agree to float tolerance
+    np.testing.assert_allclose(
+        np.asarray(res.state.scores), np.asarray(direct.scores), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_grid_expansion_and_parsing():
+    spec = exp_grid.parse_grid("bm25:k1=0.9|1.2,b=0.4|0.75")
+    variants = spec.expand()
+    assert len(variants) == 4
+    assert sorted(v.name for v in variants) == [
+        "bm25(b=0.4,k1=0.9)", "bm25(b=0.4,k1=1.2)",
+        "bm25(b=0.75,k1=0.9)", "bm25(b=0.75,k1=1.2)",
+    ]
+    assert all(v.kind == "lexical" for v in variants)
+
+    with pytest.raises(KeyError, match="unknown scorer"):
+        exp_grid.parse_grid("nope:k=1")
+    with pytest.raises(ValueError, match="malformed"):
+        exp_grid.parse_grid("bm25:k1")
+    with pytest.raises(ValueError, match="duplicate"):
+        exp_grid.expand_grids((exp_grid.GridSpec("bm25"), exp_grid.GridSpec("bm25")))
+    with pytest.raises(ValueError, match="one corpus representation"):
+        exp_grid.expand_grids((exp_grid.GridSpec("bm25"), exp_grid.GridSpec("dense_dot")))
+    # bools survive parsing
+    spec = exp_grid.parse_grid("ql_lm:length_prior=true|false")
+    assert spec.params == (("length_prior", (True, False)),)
+
+
+def test_registry():
+    assert "smoke" in exp_grid.EXPERIMENTS
+    spec = exp_grid.get_experiment("smoke")
+    assert len(spec.scorers()) == 2
+    assert len(exp_grid.get_experiment("bm25-grid").scorers()) == 5
+    with pytest.raises(KeyError, match="unknown experiment"):
+        exp_grid.get_experiment("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        exp_grid.register_experiment(spec)
+
+
+def test_run_experiment_lifecycle(tmp_path):
+    spec = exp_grid.get_experiment("smoke")
+    report = runner.run_experiment(spec, out_dir=str(tmp_path / "exp"))
+    assert report["models"] == ["ql_lm", "bm25"]
+    for model in report["models"]:
+        assert os.path.exists(report["runs"][model])
+        agg = report["metrics"][model]
+        assert set(agg) >= {"map", "mrr", "p@5", "ndcg@10", "recall@10"}
+        assert 0.0 <= agg["map"] <= 1.0
+    assert report["baseline"] == "ql_lm"
+    assert set(report["significance"]) == {"bm25"}
+    assert 0.0 < report["significance"]["bm25"]["p_value"] <= 1.0
+    on_disk = json.load(open(tmp_path / "exp" / "report.json"))
+    assert on_disk == report
+    # rankings retrieve planted relevance far above chance for both models
+    qrels = runner.prepare_collection(spec).qrels
+    chance = float((qrels > 0).mean())
+    for model in report["models"]:
+        assert report["metrics"][model]["p@5"] > 5 * chance
+
+
+def test_amortization_curve_smoke(collection):
+    _, stats, queries, docs = collection
+    scorers = [scoring.make_variant(b, **p) for b, p in GRID_5[:4]]
+    payload = exp_bench.amortization_curve(
+        queries, docs, scorers, k=K, chunk_size=CHUNK, stats=stats,
+        sizes=(1, 2, 4), repeats=1, warmup=1,
+    )
+    assert [pt["models"] for pt in payload["curve"]] == [1, 2, 4]
+    assert all(pt["wall_s"] > 0 for pt in payload["curve"])
+    assert all("speedup_vs_independent" in pt for pt in payload["curve"])
+    assert "amortization_x" in payload
+    # unsorted sizes are normalized so t(1) is measured before any speedup
+    shuffled = exp_bench.amortization_curve(
+        queries, docs, scorers, k=K, chunk_size=CHUNK, stats=stats,
+        sizes=(4, 1, 2), repeats=1, warmup=0,
+    )
+    assert [pt["models"] for pt in shuffled["curve"]] == [1, 2, 4]
+    assert all("speedup_vs_independent" in pt for pt in shuffled["curve"])
+    with pytest.raises(ValueError, match="variants"):
+        exp_bench.amortization_curve(
+            queries, docs, scorers[:2], k=K, chunk_size=CHUNK, sizes=(1, 4)
+        )
+
+
+def test_graded_qrels_consistent_with_binary():
+    corpus = synthetic.make_corpus(n_docs=256, vocab=VOCAB, max_len=32, seed=3)
+    queries = synthetic.make_queries(corpus, n_queries=8, seed=4)
+    binary = synthetic.make_qrels(corpus, queries, per_query=20, seed=5)
+    graded = synthetic.make_graded_qrels(corpus, queries, per_query=20, seed=5)
+    np.testing.assert_array_equal(graded > 0, binary)
+    assert graded.max() == 3
+
+
+def test_valid_mask_small_corpus():
+    state = topk.init(4, (2,))
+    state = topk.update(
+        state, jnp.asarray([[1.0, 2.0], [3.0, 4.0]]), jnp.asarray([[0, 1], [2, 3]])
+    )
+    mask = np.asarray(topk.valid_mask(state))
+    assert mask.sum(axis=-1).tolist() == [2, 2]  # only 2 of k=4 slots filled
