@@ -18,6 +18,7 @@ MODULES = (
     "anchors_throughput",
     "retrieval_scan",
     "fig2_scaling",
+    "lexical_scan",
     "serve_latency",
     "experiments_amortization",
 )

@@ -33,6 +33,21 @@ from repro.core import pipeline, scoring, topk
 from repro.core.scoring import CollectionStats, Scorer
 
 
+def _check_chunking(docs: Any, chunk_size: int) -> None:
+    """Refuse corpus shards the chunked fold / kernel grid cannot cover."""
+    n = jax.tree.leaves(docs)[0].shape[0]
+    if n % chunk_size:
+        raise ValueError(
+            f"corpus has {n} rows, not a multiple of chunk_size {chunk_size}; "
+            "pad the shard first (pipeline.pad_leading with PAD_TOKEN rows)"
+        )
+
+
+def _offset_ids(ids: jax.Array, doc_id_offset) -> jax.Array:
+    """Local row -> global doc id, preserving the -1 empty-slot sentinel."""
+    return jnp.where(ids >= 0, ids + jnp.int32(doc_id_offset), ids)
+
+
 def search_local(
     queries: Any,
     docs: Any,
@@ -49,13 +64,23 @@ def search_local(
     ``docs`` is ``(tokens [n, L], lens [n])`` for lexical scorers or a vector
     matrix ``[n, dim]`` for dense scorers. ``n`` must be a multiple of
     ``chunk_size``. ``doc_id_offset`` maps local row -> global doc id.
+
+    ``use_kernel`` dispatches to the fused Pallas path for *both* kinds:
+    the dense score+top-k kernel, or the lexical scan kernel (shared
+    on-chip tf + scorer epilogue + resident top-k).
     """
-    if scorer.kind == "dense" and use_kernel:
+    _check_chunking(docs, chunk_size)
+    if use_kernel:
+        if scorer.kind == "lexical":
+            state = search_local_multi(
+                queries, docs, (scorer,), k=k, chunk_size=chunk_size, stats=stats,
+                doc_id_offset=doc_id_offset, use_kernel=True,
+            )
+            return topk.TopKState(scores=state.scores[0], ids=state.ids[0])
         from repro.kernels import ops  # local import: kernels are optional
 
-        n_q = queries.shape[0]
         scores, ids = ops.score_topk(queries, docs, k=k, block_d=chunk_size)
-        return topk.TopKState(scores=scores, ids=ids + jnp.int32(doc_id_offset))
+        return topk.TopKState(scores=scores, ids=_offset_ids(ids, doc_id_offset))
 
     n_q = jax.tree.leaves(queries)[0].shape[0]
     state0 = topk.init(k, (n_q,))
@@ -79,6 +104,7 @@ def search_local_multi(
     stats: CollectionStats | None = None,
     doc_id_offset: jax.Array | int = 0,
     init_state: topk.TopKState | None = None,
+    use_kernel: bool = False,
 ) -> topk.TopKState:
     """Scan a corpus shard once, scoring a whole *grid* of models.
 
@@ -95,6 +121,10 @@ def search_local_multi(
     ``init_state`` resumes the fold from a previously checkpointed state
     (the scan-job runner in `repro.experiments.job`); associativity of the
     combiner makes the segmented fold equal to the unsegmented one.
+
+    ``use_kernel`` runs a lexical grid through the fused Pallas kernel: the
+    whole grid scans in **one kernel pass** — the tf reduction is shared in
+    VMEM and each model's epilogue + top-k fold stays resident on-chip.
     """
     scorers = tuple(scorers)
     if not scorers:
@@ -103,6 +133,7 @@ def search_local_multi(
     if len(kinds) != 1:
         raise ValueError(f"multi-scorer scan needs a single kind, got {sorted(kinds)}")
     kind = kinds.pop()
+    _check_chunking(docs, chunk_size)
 
     n_q = jax.tree.leaves(queries)[0].shape[0]
     state0 = init_state if init_state is not None else topk.init(k, (len(scorers), n_q))
@@ -114,6 +145,24 @@ def search_local_multi(
         # the fold truncates every block to state.k, so a mismatched init_state
         # would silently override the requested depth
         raise ValueError(f"init_state has k={state0.k}, requested k={k}")
+
+    if use_kernel:
+        if kind != "lexical":
+            raise ValueError("use_kernel multi-scan supports lexical grids only")
+        from repro.kernels import ops  # local import: kernels are optional
+
+        d_tokens, d_len = docs
+        modes, weights, ab = scoring.lexical_epilogues(scorers, queries, stats)
+        scores, ids = ops.lexical_scan_topk(
+            queries, weights, ab, d_tokens, d_len, modes=modes, k=k, block_d=chunk_size
+        )
+        state = topk.TopKState(scores=scores, ids=_offset_ids(ids, doc_id_offset))
+        if init_state is not None:
+            # resume: fold this pass's k-bounded result into the prior state
+            # (associativity again — same candidates, same tie-break)
+            state = topk.merge(init_state, state)
+        return state
+
     offset = jnp.asarray(doc_id_offset, jnp.int32)
 
     def fold(state, chunk, start):

@@ -12,7 +12,11 @@ the MXU busy. Two families:
 * ``lexical`` — raw-token scan, exactly the paper's setting. Documents are
   padded token-id arrays; term frequencies are recomputed on the fly from the
   raw text every scan (no index!), which is the "radical new approaches can use
-  anything in the document" property the paper argues for.
+  anything in the document" property the paper argues for. Every lexical
+  scorer further decomposes into the shared tf reduction plus a declarative
+  **epilogue** (`EpilogueMode` + `LexicalEpilogue`, applied by
+  `apply_epilogue`) — the contract the fused Pallas lexical-scan kernel
+  consumes, and what lets one kernel pass score a whole model grid.
 * ``dense``   — learned-representation scan (two-tower recsys, neural IR); the
   block score is a plain matmul and the hot path of the Pallas kernel.
 
@@ -45,17 +49,172 @@ class CollectionStats(NamedTuple):
     avg_doc_len: jax.Array  # scalar
 
 
-def term_frequencies(q_tokens: jax.Array, d_tokens: jax.Array) -> jax.Array:
+def term_frequencies(
+    q_tokens: jax.Array, d_tokens: jax.Array, *, tile_d: int = 16
+) -> jax.Array:
     """tf[t, q, d] of each query term in each doc, from raw token ids.
 
     ``q_tokens [n_q, L_q]``, ``d_tokens [n_d, L_d]`` (PAD_TOKEN-padded) ->
     ``tf [n_q, L_q, n_d]`` float32. This *is* the sequential scan: no posting
     list, just an equality reduction over the raw document text.
+
+    The reduction over ``L_d`` is tiled (``tile_d`` positions per step), so
+    the live intermediate is ``[n_q, L_q, n_d, tile_d]`` — the full rank-4
+    ``[n_q, L_q, n_d, L_d]`` cross-product is never materialized and the
+    scan stays memory-bounded (~10x over the dense form on the CPU host;
+    see benchmarks/lexical_scan.py). Query pads are remapped to a sentinel
+    that matches nothing, which subsumes the doc-side validity mask: real
+    tokens are >= 0, so they never equal PAD_TOKEN either.
     """
-    # [n_q, L_q, n_d, L_d] equality, reduced over L_d.
+    n_d, L_d = d_tokens.shape
+    q_safe = jnp.where(q_tokens == PAD_TOKEN, jnp.int32(PAD_TOKEN - 1), q_tokens)
+    pad = (-L_d) % tile_d
+    if pad:
+        d_tokens = jnp.pad(d_tokens, ((0, 0), (0, pad)), constant_values=PAD_TOKEN)
+    tiles = d_tokens.reshape(n_d, -1, tile_d).transpose(1, 0, 2)  # [n_tiles, n_d, tile_d]
+
+    def fold(acc, tile):
+        eq = q_safe[:, :, None, None] == tile[None, None, :, :]
+        return acc + jnp.sum(eq, axis=-1, dtype=jnp.int32), None
+
+    acc0 = jnp.zeros((*q_tokens.shape, n_d), jnp.int32)
+    tf, _ = jax.lax.scan(fold, acc0, tiles)
+    return tf.astype(jnp.float32)
+
+
+def term_frequencies_dense(q_tokens: jax.Array, d_tokens: jax.Array) -> jax.Array:
+    """Seed rank-4 form of :func:`term_frequencies`, kept as the parity
+    oracle and the benchmark baseline — materializes the full
+    ``[n_q, L_q, n_d, L_d]`` equality cross-product."""
     eq = q_tokens[:, :, None, None] == d_tokens[None, None, :, :]
     valid_d = (d_tokens != PAD_TOKEN)[None, None, :, :]
     return jnp.sum(eq & valid_d, axis=-1).astype(jnp.float32)
+
+
+# --------------------------------------------------------------- epilogues
+#
+# Every lexical scorer decomposes into the *shared* term-frequency reduction
+# (the dominant chunk cost) plus a cheap per-term **epilogue**: a declarative
+# spec small enough to evaluate on the VPU inside the fused Pallas kernel
+# (`repro.kernels.lexical_scan`) and on the pure-JAX fallback path with the
+# *same code* (`apply_epilogue`), which is what makes kernel-vs-host parity
+# bitwise for the scores. The static half (`EpilogueMode`) selects the
+# per-term transform and the doc-length treatment; the traced half
+# (`LexicalEpilogue`) is a per-term weight table plus two doc-length
+# normalization scalars.
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueMode:
+    """Static (hashable) half of a lexical scorer's epilogue spec.
+
+    ``mode`` picks the per-term transform of ``(weights w, tf, doc len)``:
+
+    * ``"ql"``    — ``log1p(w * tf / |d|)``  (Hiemstra's log-odds)
+    * ``"bm25"``  — ``w * tf / (tf + alpha + beta * |d|)``  (BM25 saturation)
+    * ``"tfidf"`` — ``w * log1p(tf)``
+
+    ``length_prior`` adds ``log |d|`` (QL LM document prior);
+    ``length_norm="rsqrt"`` divides the summed score by ``sqrt(|d|)``.
+    """
+
+    mode: str  # "ql" | "bm25" | "tfidf"
+    length_prior: bool = False
+    length_norm: str = "none"  # "none" | "rsqrt"
+
+
+class LexicalEpilogue(NamedTuple):
+    """Traced half of the epilogue spec (per model in a grid).
+
+    ``weights [n_q, L_q]`` fold the collection statistics and the query
+    validity mask into one per-term table (zero for PAD / zero-frequency
+    terms, so masked terms contribute exactly 0); ``alpha``/``beta`` are the
+    BM25 doc-length normalization ``tf + alpha + beta*|d|`` (zero scalars
+    for the other modes).
+    """
+
+    weights: jax.Array  # [n_q, L_q] float32
+    alpha: jax.Array  # scalar float32
+    beta: jax.Array  # scalar float32
+
+
+def apply_epilogue(
+    mode: EpilogueMode, ep: LexicalEpilogue, tf: jax.Array, d_len: jax.Array
+) -> jax.Array:
+    """Score a block from its term frequencies: ``[n_q, L_q, n_d] -> [n_q, n_d]``.
+
+    Shared verbatim by the Pallas kernel epilogue and the pure-JAX fold, so
+    the two paths agree bitwise given the same ``tf``. VPU-only ops: no
+    gathers, no matmuls — the collection statistics were already folded into
+    ``ep.weights`` when the epilogue was built.
+    """
+    d_len_f = jnp.maximum(d_len.astype(jnp.float32), 1.0)  # [n_d]
+    w = ep.weights[:, :, None]  # [n_q, L_q, 1]
+    if mode.mode == "ql":
+        per_term = jnp.log1p(w * tf / d_len_f[None, None, :])
+    elif mode.mode == "bm25":
+        norm = ep.alpha + ep.beta * d_len.astype(jnp.float32)
+        per_term = w * tf / (tf + norm[None, None, :])
+    elif mode.mode == "tfidf":
+        per_term = w * jnp.log1p(tf)
+    else:
+        raise ValueError(f"unknown epilogue mode {mode.mode!r}")
+    score = jnp.sum(per_term, axis=1)  # [n_q, n_d]
+    if mode.length_prior:
+        score = score + jnp.log(d_len_f)[None, :]
+    if mode.length_norm == "rsqrt":
+        score = score / jnp.sqrt(d_len_f)[None, :]
+    # padded corpus rows (len 0) must never enter the top-k
+    return jnp.where((d_len > 0)[None, :], score, -jnp.inf)
+
+
+def ql_lm_epilogue(
+    q_tokens: jax.Array,
+    stats: CollectionStats,
+    *,
+    lam: float = 0.15,
+    length_prior: bool = True,
+) -> tuple[EpilogueMode, LexicalEpilogue]:
+    """Hiemstra QL LM: ``w = lam * |C| / ((1-lam) * cf)`` per valid term."""
+    cf = jnp.asarray(stats.cf)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)
+    q_valid = (q_tokens != PAD_TOKEN) & (cf > 0)
+    safe_cf = jnp.where(cf > 0, cf, 1.0)
+    total = jnp.asarray(stats.total_terms).astype(jnp.float32)
+    w = jnp.where(q_valid, lam * total / ((1.0 - lam) * safe_cf), 0.0)
+    zero = jnp.float32(0.0)
+    return EpilogueMode("ql", length_prior=length_prior), LexicalEpilogue(w, zero, zero)
+
+
+def bm25_epilogue(
+    q_tokens: jax.Array,
+    stats: CollectionStats,
+    *,
+    k1: float = 1.2,
+    b: float = 0.75,
+) -> tuple[EpilogueMode, LexicalEpilogue]:
+    """Okapi BM25: ``w = idf * (k1+1)``, saturation ``tf + k1(1-b) + (k1 b/avgdl)|d|``."""
+    df = jnp.asarray(stats.df)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)
+    n = jnp.asarray(stats.n_docs).astype(jnp.float32)
+    idf = jnp.log1p((n - df + 0.5) / (df + 0.5))
+    q_valid = (q_tokens != PAD_TOKEN) & (df > 0)
+    w = jnp.where(q_valid, idf * (k1 + 1.0), 0.0)
+    avgdl = jnp.asarray(stats.avg_doc_len).astype(jnp.float32)
+    return EpilogueMode("bm25"), LexicalEpilogue(
+        w, jnp.float32(k1 * (1.0 - b)), jnp.float32(k1 * b) / avgdl
+    )
+
+
+def tfidf_epilogue(
+    q_tokens: jax.Array, stats: CollectionStats
+) -> tuple[EpilogueMode, LexicalEpilogue]:
+    """ltc tf-idf: ``w = idf``, score scaled by ``1/sqrt(|d|)``."""
+    df = jnp.asarray(stats.df)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)
+    n = jnp.asarray(stats.n_docs).astype(jnp.float32)
+    idf = jnp.log((n + 1.0) / (df + 1.0))
+    q_valid = (q_tokens != PAD_TOKEN) & (df > 0)
+    w = jnp.where(q_valid, idf, 0.0)
+    zero = jnp.float32(0.0)
+    return EpilogueMode("tfidf", length_norm="rsqrt"), LexicalEpilogue(w, zero, zero)
 
 
 def hiemstra_lm(
@@ -75,22 +234,8 @@ def hiemstra_lm(
     """
     if tf is None:
         tf = term_frequencies(q_tokens, d_tokens)  # [n_q, L_q, n_d]
-    cf = jnp.asarray(stats.cf)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)  # [n_q, L_q]
-    q_valid = (q_tokens != PAD_TOKEN) & (cf > 0)
-    safe_cf = jnp.where(cf > 0, cf, 1.0)
-    d_len_f = jnp.maximum(d_len.astype(jnp.float32), 1.0)  # [n_d]
-    odds = (
-        lam
-        * tf
-        * jnp.asarray(stats.total_terms).astype(jnp.float32)
-        / ((1.0 - lam) * safe_cf[:, :, None] * d_len_f[None, None, :])
-    )
-    per_term = jnp.log1p(odds) * q_valid[:, :, None]
-    score = jnp.sum(per_term, axis=1)  # [n_q, n_d]
-    if length_prior:
-        score = score + jnp.log(d_len_f)[None, :]
-    # padded corpus rows (len 0) must never enter the top-k
-    return jnp.where((d_len > 0)[None, :], score, -jnp.inf)
+    mode, ep = ql_lm_epilogue(q_tokens, stats, lam=lam, length_prior=length_prior)
+    return apply_epilogue(mode, ep, tf, d_len)
 
 
 def bm25(
@@ -106,14 +251,8 @@ def bm25(
     """Okapi BM25 over the raw-token scan (a "new approach" in 5 lines)."""
     if tf is None:
         tf = term_frequencies(q_tokens, d_tokens)
-    df = jnp.asarray(stats.df)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)
-    n = jnp.asarray(stats.n_docs).astype(jnp.float32)
-    idf = jnp.log1p((n - df + 0.5) / (df + 0.5))
-    q_valid = (q_tokens != PAD_TOKEN) & (df > 0)
-    norm = k1 * (1.0 - b + b * d_len.astype(jnp.float32) / stats.avg_doc_len)
-    per_term = idf[:, :, None] * tf * (k1 + 1.0) / (tf + norm[None, None, :])
-    score = jnp.sum(per_term * q_valid[:, :, None], axis=1)
-    return jnp.where((d_len > 0)[None, :], score, -jnp.inf)
+    mode, ep = bm25_epilogue(q_tokens, stats, k1=k1, b=b)
+    return apply_epilogue(mode, ep, tf, d_len)
 
 
 def tfidf(
@@ -127,13 +266,8 @@ def tfidf(
     """Plain ltc-style tf-idf, length-normalized."""
     if tf is None:
         tf = term_frequencies(q_tokens, d_tokens)
-    df = jnp.asarray(stats.df)[jnp.clip(q_tokens, 0, None)].astype(jnp.float32)
-    n = jnp.asarray(stats.n_docs).astype(jnp.float32)
-    idf = jnp.log((n + 1.0) / (df + 1.0))
-    q_valid = (q_tokens != PAD_TOKEN) & (df > 0)
-    w = jnp.log1p(tf) * idf[:, :, None] * q_valid[:, :, None]
-    score = jnp.sum(w, axis=1) / jnp.sqrt(jnp.maximum(d_len.astype(jnp.float32), 1.0))[None, :]
-    return jnp.where((d_len > 0)[None, :], score, -jnp.inf)
+    mode, ep = tfidf_epilogue(q_tokens, stats)
+    return apply_epilogue(mode, ep, tf, d_len)
 
 
 def dense_dot(q_vecs: jax.Array, d_vecs: jax.Array) -> jax.Array:
@@ -158,6 +292,10 @@ class Scorer:
 
     ``params`` records keyword overrides bound onto ``fn`` (a grid point in
     an experiment); ``base`` names the unparameterized scorer it came from.
+    ``epilogue`` is the lexical decomposition contract
+    ``(q_tokens, stats) -> (EpilogueMode, LexicalEpilogue)`` — the scorer
+    restated as shared-tf + declarative epilogue, which is what the fused
+    Pallas lexical kernel consumes (None for dense scorers).
     """
 
     name: str
@@ -165,6 +303,7 @@ class Scorer:
     fn: Callable
     base: str | None = None
     params: tuple[tuple[str, object], ...] = ()
+    epilogue: Callable | None = None
 
     def score_block(
         self,
@@ -183,9 +322,9 @@ class Scorer:
 
 
 SCORERS: dict[str, Scorer] = {
-    "ql_lm": Scorer("ql_lm", "lexical", hiemstra_lm),
-    "bm25": Scorer("bm25", "lexical", bm25),
-    "tfidf": Scorer("tfidf", "lexical", tfidf),
+    "ql_lm": Scorer("ql_lm", "lexical", hiemstra_lm, epilogue=ql_lm_epilogue),
+    "bm25": Scorer("bm25", "lexical", bm25, epilogue=bm25_epilogue),
+    "tfidf": Scorer("tfidf", "lexical", tfidf, epilogue=tfidf_epilogue),
     "dense_dot": Scorer("dense_dot", "dense", dense_dot),
     "dense_cosine": Scorer("dense_cosine", "dense", dense_cosine),
 }
@@ -207,8 +346,35 @@ def make_variant(base: str, name: str | None = None, **params) -> Scorer:
     """
     b = get_scorer(base)
     fn = functools.partial(b.fn, **params) if params else b.fn
+    ep = b.epilogue
+    if ep is not None and params:
+        ep = functools.partial(ep, **params)  # fn and epilogue share param names
     if name is None:
         name = base if not params else (
             base + "(" + ",".join(f"{k}={v}" for k, v in sorted(params.items())) + ")"
         )
-    return Scorer(name, b.kind, fn, base=base, params=tuple(sorted(params.items())))
+    return Scorer(
+        name, b.kind, fn, base=base, params=tuple(sorted(params.items())), epilogue=ep
+    )
+
+
+def lexical_epilogues(
+    scorers: tuple[Scorer, ...] | list[Scorer],
+    q_tokens: jax.Array,
+    stats: CollectionStats,
+) -> tuple[tuple[EpilogueMode, ...], jax.Array, jax.Array]:
+    """Assemble a grid's epilogue specs for the fused lexical kernel.
+
+    Returns ``(modes, weights [n_models, n_q, L_q], ab [n_models, 2])`` —
+    the static mode tuple is hashable (a jit static arg), the weight tables
+    and (alpha, beta) scalars ride along as traced arrays.
+    """
+    modes, weights, ab = [], [], []
+    for s in scorers:
+        if s.kind != "lexical" or s.epilogue is None:
+            raise ValueError(f"scorer {s.name!r} has no lexical epilogue")
+        mode, ep = s.epilogue(q_tokens, stats)
+        modes.append(mode)
+        weights.append(ep.weights)
+        ab.append(jnp.stack([ep.alpha, ep.beta]))
+    return tuple(modes), jnp.stack(weights), jnp.stack(ab)

@@ -113,6 +113,7 @@ def run_scan_job(
     shard: int = 0,
     n_shards: int = 1,
     doc_id_offset: int = 0,
+    use_kernel: bool = False,
 ) -> ScanJobResult:
     """Run (or resume) a checkpointed multi-scorer scan over a corpus shard.
 
@@ -167,6 +168,7 @@ def run_scan_job(
             stats=stats,
             doc_id_offset=offset,
             init_state=state,
+            use_kernel=use_kernel,
         )
 
     def progress(done: int) -> dict:

@@ -114,6 +114,7 @@ def run_experiment(
         ckpt_dir=os.path.join(out_dir, "ckpt"),
         resume=resume,
         fail_at_segment=fail_at_segment,
+        use_kernel=spec.use_kernel,
     )
 
     run_paths = write_run_files(

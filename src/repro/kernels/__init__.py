@@ -1,5 +1,7 @@
 """Pallas TPU kernels (validated via interpret=True on the dry-run host):
-score_topk (MIREX fused map+combine), flash_attn, flash_decode."""
+score_topk (MIREX fused map+combine, dense), lexical_scan (fused raw-token
+scan: on-chip tf + scorer epilogues + resident multi-model top-k),
+flash_attn, flash_decode."""
 
 from repro.kernels import ops, ref
 

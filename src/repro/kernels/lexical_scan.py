@@ -1,0 +1,169 @@
+"""Fused Pallas lexical-scan kernel — the paper's *actual* hot loop in VMEM.
+
+MIREX's headline claim is that sequentially scanning raw documents is fast
+enough for large-scale IR experiments; this kernel makes the raw-token scan
+bandwidth-bound on the document stream, the way the paper argues it should
+be. Each TPU grid step streams one ``[block_d, L_d]`` document-token tile
+HBM→VMEM and:
+
+1. **tf reduction on-chip** — query-term frequencies are accumulated by
+   reducing over ``L_d`` in ``tile_d``-wide sub-tiles, so peak live memory
+   is ``O(n_q · L_q · block_d · tile_d)`` and the rank-4
+   ``[n_q, L_q, n_d, L_d]`` equality cross-product never exists anywhere.
+2. **scorer epilogues on the VPU** — each model in the grid applies its
+   declarative epilogue spec (`scoring.EpilogueMode` +
+   weight table / normalization scalars) to the *shared* tf block via
+   `scoring.apply_epilogue` — literally the same code the pure-JAX fallback
+   runs, so kernel-vs-host score parity is bitwise given the same tf.
+3. **resident top-k fold** — each model's block scores fold into a resident
+   ``[n_models, n_q, k]`` state with the k-bounded bitonic combiner
+   (`score_topk.bitonic_merge_desc`): the output refs double as the running
+   state because the TPU grid executes sequentially (combiner semantics).
+
+Because the tf reduction — the dominant cost of a raw-token chunk — is
+computed once per tile and shared by every epilogue, a whole **model grid
+scans in a single kernel pass**: PR 2's experiment-side amortization
+(claim C1 on the model axis), moved from the XLA path into VMEM.
+
+BlockSpecs: queries ``[n_q, L_q]``, weights ``[n_models, n_q, L_q]`` and
+normalization scalars ``[n_models, 2]`` are resident across steps; doc
+tokens ``[block_d, L_d]`` and lengths ``[1, block_d]`` are streamed;
+outputs ``[n_models, n_q, k]`` are pinned to block (0, 0, 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pipeline import next_pow2
+from repro.core.scoring import PAD_TOKEN, EpilogueMode, LexicalEpilogue
+from repro.core.scoring import apply_epilogue
+from repro.kernels.score_topk import _pad_desc, bitonic_merge_desc
+
+
+def _block_term_frequencies(q_tok, d_tok, *, tile_d: int) -> jax.Array:
+    """On-chip tf for one doc tile: ``[n_q, L_q], [block_d, L_d] -> [n_q, L_q, block_d]``.
+
+    Reduces over ``L_d`` in ``tile_d`` sub-tiles with an int32 accumulator —
+    identical accumulation order (and therefore identical integers) to the
+    tiled host fallback in `scoring.term_frequencies`. ``L_d`` must be a
+    multiple of ``tile_d`` (the wrapper pads with PAD_TOKEN); query pads are
+    pre-remapped by the wrapper so no validity mask is needed here.
+    """
+    n_q, l_q = q_tok.shape
+    block_d, l_d = d_tok.shape
+
+    def fold(t, acc):
+        sub = jax.lax.dynamic_slice_in_dim(d_tok, t * tile_d, tile_d, axis=1)
+        eq = q_tok[:, :, None, None] == sub[None, None, :, :]
+        return acc + jnp.sum(eq, axis=-1, dtype=jnp.int32)
+
+    acc0 = jnp.zeros((n_q, l_q, block_d), jnp.int32)
+    tf = jax.lax.fori_loop(0, l_d // tile_d, fold, acc0)
+    return tf.astype(jnp.float32)
+
+
+def _lexical_scan_kernel(
+    q_ref,  # [n_q, L_q] int32 — resident (pads remapped to PAD_TOKEN - 1)
+    w_ref,  # [n_models, n_q, L_q] f32 — resident weight tables
+    ab_ref,  # [n_models, 2] f32 — resident (alpha, beta) per model
+    d_ref,  # [block_d, L_d] int32 — this step's stream tile
+    dlen_ref,  # [1, block_d] int32 — this step's doc lengths
+    out_s_ref,  # [n_models, n_q, k] f32 — resident top-k scores
+    out_i_ref,  # [n_models, n_q, k] int32 — resident top-k ids
+    *,
+    modes: tuple[EpilogueMode, ...],
+    block_d: int,
+    k: int,
+    tile_d: int,
+):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_s_ref[...] = jnp.full_like(out_s_ref, -jnp.inf)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    q = q_ref[...]
+    d = d_ref[...]
+    dlen = dlen_ref[0, :]  # [block_d]
+    tf = _block_term_frequencies(q, d, tile_d=tile_d)  # shared by the grid
+
+    k_pad = next_pow2(k)
+    cand_k = min(k, block_d)
+    for m, mode in enumerate(modes):  # n_models is static: unrolled epilogues
+        ep = LexicalEpilogue(w_ref[m], ab_ref[m, 0], ab_ref[m, 1])
+        s = apply_epilogue(mode, ep, tf, dlen)  # [n_q, block_d], VPU only
+        ids = step * block_d + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        cand_s, cand_pos = jax.lax.top_k(s, cand_k)  # sorted descending
+        cand_i = jnp.take_along_axis(ids, cand_pos, axis=1)
+        # zero-length rows score -inf; blank their ids so the merged state
+        # carries the host fold's (-inf, -1) empty-slot sentinel, never a
+        # padded corpus row
+        cand_i = jnp.where(cand_s == -jnp.inf, -1, cand_i)
+        cand_s, cand_i = _pad_desc(cand_s, cand_i, k_pad)
+        state_s, state_i = _pad_desc(out_s_ref[m], out_i_ref[m], k_pad)
+        top_s, top_i = bitonic_merge_desc(state_s, state_i, cand_s, cand_i)
+        out_s_ref[m] = top_s[:, :k]
+        out_i_ref[m] = top_i[:, :k]
+
+
+def lexical_scan_topk_pallas(
+    q_tokens: jax.Array,  # [n_q, L_q] int32, PAD_TOKEN-padded
+    weights: jax.Array,  # [n_models, n_q, L_q] f32
+    ab: jax.Array,  # [n_models, 2] f32
+    d_tokens: jax.Array,  # [n_d, L_d] int32, PAD_TOKEN-padded
+    d_len: jax.Array,  # [n_d] int32
+    *,
+    modes: tuple[EpilogueMode, ...],
+    k: int,
+    block_d: int = 512,
+    tile_d: int = 16,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused multi-model lexical scan -> ``(scores, ids) [n_models, n_q, k]``.
+
+    Ids are block-local (0-based over ``n_d``); empty slots carry the
+    ``(-inf, -1)`` sentinels of `topk.TopKState`.
+    """
+    n_q, l_q = q_tokens.shape
+    n_d, l_d = d_tokens.shape
+    n_models = weights.shape[0]
+    if len(modes) != n_models:
+        raise ValueError(f"{len(modes)} modes for {n_models} weight tables")
+    if n_d % block_d:
+        raise ValueError(f"{n_d} docs not divisible by block_d {block_d}")
+    # query pads -> a token that matches nothing (doc pads are PAD_TOKEN,
+    # real tokens >= 0), replacing the doc-side validity mask
+    q_safe = jnp.where(q_tokens == PAD_TOKEN, jnp.int32(PAD_TOKEN - 1), q_tokens)
+    pad = (-l_d) % tile_d
+    if pad:
+        d_tokens = jnp.pad(d_tokens, ((0, 0), (0, pad)), constant_values=PAD_TOKEN)
+        l_d += pad
+    kernel = functools.partial(
+        _lexical_scan_kernel, modes=modes, block_d=block_d, k=k, tile_d=tile_d
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_d // block_d,),
+        in_specs=[
+            pl.BlockSpec((n_q, l_q), lambda i: (0, 0)),  # Q resident in VMEM
+            pl.BlockSpec((n_models, n_q, l_q), lambda i: (0, 0, 0)),  # weights resident
+            pl.BlockSpec((n_models, 2), lambda i: (0, 0)),  # norm scalars resident
+            pl.BlockSpec((block_d, l_d), lambda i: (i, 0)),  # doc tokens streamed
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),  # doc lengths streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((n_models, n_q, k), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_models, n_q, k), lambda i: (0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_models, n_q, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_models, n_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_safe, weights, ab, d_tokens, d_len.reshape(1, n_d))

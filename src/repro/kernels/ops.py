@@ -16,6 +16,7 @@ import jax
 
 from repro.kernels.flash_attn import flash_attention_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.lexical_scan import lexical_scan_topk_pallas
 from repro.kernels.score_topk import score_topk_pallas
 
 _BACKENDS = ("auto", "interpret", "compiled")
@@ -64,6 +65,26 @@ def score_topk(q, d, *, k: int, block_d: int = 1024, merge: str = "bitonic"):
     """
     return score_topk_pallas(
         q, d, k=k, block_d=block_d, merge=merge, interpret=_interpret_default()
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("modes", "k", "block_d", "tile_d")
+)
+def lexical_scan_topk(
+    q_tokens, weights, ab, d_tokens, d_len, *, modes, k: int,
+    block_d: int = 512, tile_d: int = 16,
+):
+    """Fused multi-model lexical scan (shared on-chip tf + per-model scorer
+    epilogues + resident top-k). -> ``(scores, ids) [n_models, n_q, k]``.
+
+    ``modes`` is the static tuple of `scoring.EpilogueMode`; build all three
+    arguments from a scorer grid with `scoring.lexical_epilogues`.
+    """
+    return lexical_scan_topk_pallas(
+        q_tokens, weights, ab, d_tokens, d_len,
+        modes=modes, k=k, block_d=block_d, tile_d=tile_d,
+        interpret=_interpret_default(),
     )
 
 

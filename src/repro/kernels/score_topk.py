@@ -36,13 +36,21 @@ from repro.core.pipeline import next_pow2
 def bitonic_merge_desc(
     a_s: jax.Array, a_i: jax.Array, b_s: jax.Array, b_i: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
-    """Merge two descending-sorted ``[..., m]`` (score, id) lists; keep top m.
+    """Merge two ``[..., m]`` (score, id) lists sorted by (score desc, id
+    asc); keep the top m under that same lexicographic order.
 
     ``a ++ reverse(b)`` is bitonic (descending then ascending), so one
     bitonic merge network — ``log2(2m) `` compare-exchange stages expressed
     as reshapes + ``where`` (VPU-friendly: no gathers) — yields the 2m
-    values fully sorted descending; the first m are the merged top-m.
-    ``m`` must be a power of two (pad with ``-inf``/``-1`` first).
+    values fully sorted; the first m are the merged top-m. ``m`` must be a
+    power of two (pad with ``-inf``/``-1`` first).
+
+    Ties break toward the **smaller id**. Scan candidates carry strictly
+    increasing doc ids across stream blocks, so this is exactly
+    ``lax.top_k``'s positional tie-break on the host fold
+    (`topk.update`) — what keeps kernel and host rankings id-exact even on
+    the equal scores lexical scoring mass-produces (e.g. every
+    zero-match document under BM25).
     """
     m = a_s.shape[-1]
     assert m & (m - 1) == 0, f"bitonic merge needs power-of-two width, got {m}"
@@ -56,7 +64,8 @@ def bitonic_merge_desc(
         ir = i.reshape(*lead, length // (2 * stride), 2, stride)
         lo_s, hi_s = sr[..., 0, :], sr[..., 1, :]
         lo_i, hi_i = ir[..., 0, :], ir[..., 1, :]
-        keep = lo_s >= hi_s  # descending: max goes to the lower position
+        # descending by score, ascending by id on ties: max to lower position
+        keep = (lo_s > hi_s) | ((lo_s == hi_s) & (lo_i <= hi_i))
         max_s = jnp.where(keep, lo_s, hi_s)
         min_s = jnp.where(keep, hi_s, lo_s)
         max_i = jnp.where(keep, lo_i, hi_i)

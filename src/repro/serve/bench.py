@@ -48,15 +48,16 @@ def sweep_batch_sizes(
                 latencies.append(service.metrics[-1].latency_s)
         lat = float(np.median(latencies))
         rec = service.metrics[-1]
-        curve.append(
-            {
-                "batch": bs,
-                "n_padded": rec.n_padded,
-                "latency_ms": lat * 1e3,
-                "us_per_query": lat / bs * 1e6,
-                "qps": bs / lat,
-            }
-        )
+        pt = {
+            "batch": bs,
+            "n_padded": rec.n_padded,
+            "latency_ms": lat * 1e3,
+            "us_per_query": lat / bs * 1e6,
+            "qps": bs / lat,
+        }
+        # per-point C1 view: batching must never make a query *more* expensive
+        pt["amortization_x"] = curve[0]["us_per_query"] / pt["us_per_query"] if curve else 1.0
+        curve.append(pt)
     payload = {
         "benchmark": "serve_latency",
         "kind": session.kind,

@@ -23,7 +23,13 @@ class LexicalSession:
     """Raw-token scan service state for one lexical scorer (ql_lm/bm25/...).
 
     The fold path is :func:`repro.core.scan.search_local`'s chunked scan —
-    term frequencies recomputed from raw text per block, no index.
+    term frequencies recomputed from raw text per block, no index. The tf
+    reduction is tiled over document positions on every path, so per-chunk
+    memory stays ``O(n_q·L_q·chunk)`` however large the batch grows (the
+    serve-path amortization fix: the seed rank-4 form made big batches
+    *slower*, inverting claim C1). ``use_kernel=None`` resolves from the
+    Pallas backend — the fused lexical kernel where it compiles (TPU), the
+    tiled pure-JAX fold elsewhere; pass True/False to force.
     """
 
     kind = "lexical"
@@ -39,10 +45,12 @@ class LexicalSession:
         chunk_size: int,
         stats: CollectionStats | None = None,
         vocab: int | None = None,
+        use_kernel: bool | None = None,
     ):
         self.scorer = get_scorer(scorer) if isinstance(scorer, str) else scorer
         if self.scorer.kind != "lexical":
             raise ValueError(f"scorer {self.scorer.name!r} is not lexical")
+        self.use_kernel = use_kernel  # None = auto-resolve at each (re)trace
         self.k = k
         self.chunk_size = chunk_size
         self._tokens = jnp.asarray(tokens, jnp.int32)
@@ -64,7 +72,16 @@ class LexicalSession:
 
         @jax.jit
         def _handle(q):
-            return scan.search_local(q, docs, scorer_, k=k_, chunk_size=chunk_, stats=st)
+            # resolved at trace time: set_kernel_backend clears jit caches,
+            # so a backend flip re-resolves on the next call (ops.py contract)
+            kern = use_kernel
+            if kern is None:
+                from repro.kernels import ops
+
+                kern = ops.kernel_backend() == "compiled"
+            return scan.search_local(
+                q, docs, scorer_, k=k_, chunk_size=chunk_, stats=st, use_kernel=kern
+            )
 
         self._handle = _handle
 

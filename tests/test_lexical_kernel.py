@@ -1,0 +1,157 @@
+"""Fused lexical-scan kernel: interpret-mode parity vs the host scorers.
+
+The contract under test (ISSUE 3 acceptance): for every lexical scorer ×
+parameter variant, with PAD_TOKEN-padded queries/docs and zero-length corpus
+rows, the kernel's rankings match the pure-JAX chunked fold **id-exactly**
+under the shared tie-break (score desc, then smaller doc id — what
+``lax.top_k``'s positional stability means on a scan whose candidate ids
+increase monotonically) and score-wise to fp32 tolerance. Plus: a whole
+model grid scanned in one kernel pass equals `scan.search_local_multi`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anchors, scan, scoring, topk
+from repro.data import synthetic
+
+VOCAB = 300
+CHUNK = 64
+N_PAD_ROWS = 64  # zero-length corpus rows appended to the synthetic corpus
+N_REAL = 256
+
+VARIANTS = [
+    scoring.get_scorer("ql_lm"),
+    scoring.make_variant("ql_lm", lam=0.5, length_prior=False),
+    scoring.get_scorer("bm25"),
+    scoring.make_variant("bm25", k1=0.9, b=0.4),
+    scoring.get_scorer("tfidf"),
+]
+
+
+@pytest.fixture(scope="module")
+def collection():
+    corpus = synthetic.make_corpus(n_docs=N_REAL, vocab=VOCAB, max_len=24, seed=3)
+    toks = np.concatenate(
+        [corpus.tokens, np.full((N_PAD_ROWS, 24), scoring.PAD_TOKEN, np.int32)]
+    )
+    lens = np.concatenate([corpus.lengths, np.zeros(N_PAD_ROWS, np.int32)])
+    stats = anchors.collection_stats(
+        jnp.asarray(toks), jnp.asarray(lens), vocab=VOCAB, chunk_size=CHUNK
+    )
+    queries = synthetic.make_queries(corpus, n_queries=12, seed=4)
+    assert (queries == scoring.PAD_TOKEN).any()  # padded query rows in play
+    return (jnp.asarray(toks), jnp.asarray(lens)), stats, jnp.asarray(queries)
+
+
+def _assert_state_parity(host: topk.TopKState, kern: topk.TopKState):
+    np.testing.assert_array_equal(np.asarray(kern.ids), np.asarray(host.ids))
+    np.testing.assert_allclose(
+        np.asarray(kern.scores), np.asarray(host.scores), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("scorer", VARIANTS, ids=lambda s: s.name)
+def test_kernel_matches_host_fold(collection, scorer):
+    docs, stats, queries = collection
+    host = scan.search_local(queries, docs, scorer, k=16, chunk_size=CHUNK, stats=stats)
+    kern = scan.search_local(
+        queries, docs, scorer, k=16, chunk_size=CHUNK, stats=stats, use_kernel=True
+    )
+    _assert_state_parity(host, kern)
+
+
+def test_kernel_padded_rows_never_surface(collection):
+    docs, stats, queries = collection
+    kern = scan.search_local(
+        queries, docs, scoring.get_scorer("ql_lm"), k=16, chunk_size=CHUNK,
+        stats=stats, use_kernel=True,
+    )
+    assert int(jnp.max(kern.ids)) < N_REAL  # no zero-length row in the top-k
+
+
+def test_grid_in_one_kernel_pass_matches_multi(collection):
+    """[n_models, n_q, k] grid state from one kernel pass == host multi-scan."""
+    docs, stats, queries = collection
+    host = scan.search_local_multi(
+        queries, docs, VARIANTS, k=16, chunk_size=CHUNK, stats=stats
+    )
+    kern = scan.search_local_multi(
+        queries, docs, VARIANTS, k=16, chunk_size=CHUNK, stats=stats, use_kernel=True
+    )
+    assert kern.scores.shape == (len(VARIANTS), queries.shape[0], 16)
+    _assert_state_parity(host, kern)
+
+
+def test_kernel_k_exceeds_corpus(collection):
+    """k > n_docs: empty slots carry the host's (-inf, -1) sentinels."""
+    docs, stats, queries = collection
+    tiny = (docs[0][:CHUNK], docs[1][:CHUNK])
+    host = scan.search_local(
+        queries, tiny, scoring.get_scorer("bm25"), k=100, chunk_size=CHUNK, stats=stats
+    )
+    kern = scan.search_local(
+        queries, tiny, scoring.get_scorer("bm25"), k=100, chunk_size=CHUNK,
+        stats=stats, use_kernel=True,
+    )
+    _assert_state_parity(host, kern)
+    assert not bool(topk.valid_mask(kern)[:, CHUNK:].any())
+
+
+def test_kernel_resume_from_init_state(collection):
+    """Segmented kernel passes (the scan-job path) == one unsegmented scan."""
+    docs, stats, queries = collection
+    grid = VARIANTS[:3]
+    full = scan.search_local_multi(
+        queries, docs, grid, k=16, chunk_size=CHUNK, stats=stats, use_kernel=True
+    )
+    half = 3 * CHUNK  # chunk-aligned segment boundary
+    seg_a = scan.search_local_multi(
+        queries, (docs[0][:half], docs[1][:half]), grid,
+        k=16, chunk_size=CHUNK, stats=stats, use_kernel=True,
+    )
+    seg_b = scan.search_local_multi(
+        queries, (docs[0][half:], docs[1][half:]), grid,
+        k=16, chunk_size=CHUNK, stats=stats,
+        doc_id_offset=half, init_state=seg_a, use_kernel=True,
+    )
+    _assert_state_parity(full, seg_b)
+
+
+def test_kernel_respects_doc_id_offset(collection):
+    docs, stats, queries = collection
+    off = scan.search_local(
+        queries, docs, scoring.get_scorer("ql_lm"), k=8, chunk_size=CHUNK,
+        stats=stats, doc_id_offset=1000, use_kernel=True,
+    )
+    base = scan.search_local(
+        queries, docs, scoring.get_scorer("ql_lm"), k=8, chunk_size=CHUNK,
+        stats=stats, use_kernel=True,
+    )
+    valid = np.asarray(topk.valid_mask(base))
+    np.testing.assert_array_equal(
+        np.asarray(off.ids)[valid], np.asarray(base.ids)[valid] + 1000
+    )
+    assert (np.asarray(off.ids)[~valid] == -1).all()  # sentinels never shifted
+
+
+def test_tiled_tf_matches_dense_reference(collection):
+    """The memory-bounded fallback is bit-equal to the seed rank-4 reduction."""
+    docs, _, queries = collection
+    tiled = scoring.term_frequencies(queries, docs[0])
+    dense = scoring.term_frequencies_dense(queries, docs[0])
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(dense))
+    # odd tile width exercises the L_d padding path
+    tiled7 = scoring.term_frequencies(queries, docs[0], tile_d=7)
+    np.testing.assert_array_equal(np.asarray(tiled7), np.asarray(dense))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_non_multiple_chunk_raises(collection, use_kernel):
+    docs, stats, queries = collection
+    with pytest.raises(ValueError, match="not a multiple of chunk_size"):
+        scan.search_local(
+            queries, docs, scoring.get_scorer("ql_lm"), k=8, chunk_size=50,
+            stats=stats, use_kernel=use_kernel,
+        )
