@@ -21,6 +21,7 @@ MODULES = (
     "lexical_scan",
     "serve_latency",
     "experiments_amortization",
+    "sharded_scan",
 )
 
 

@@ -1,0 +1,53 @@
+"""Mesh-sharded scan jobs — one map/reduce layer from kernel to runner.
+
+Paper §2 as a subsystem: a **plan** partitions the corpus into chunk- and
+segment-aligned shards (`cluster.plan`), a **map** runs the one shard fold
+every substrate shares (`cluster.mapreduce.map_shard` — multi-model
+single-pass, fused Pallas kernel under ``use_kernel``), and a **reduce**
+merges per-shard top-k states through the k-bounded lexicographic bitonic
+merge (`cluster.mapreduce.reduce_states`), whose value-determinism makes
+merged rankings — and the TREC run files written from them — byte-identical
+at every shard count. `cluster.job` adds the operational layer: per-shard
+checkpoints, progress manifests, and independent kill/resume.
+
+Scan, experiment jobs, and serve sessions all reduce through this one merge
+contract, so future scaling work (multi-process meshes, real corpora) stays
+local to this package.
+"""
+
+from repro.cluster.plan import (
+    Shard,
+    ShardPlan,
+    mesh_scan_axes,
+    plan_for_mesh,
+    plan_shards,
+)
+from repro.cluster.mapreduce import map_shard, reduce_states, scan_shards, search_mesh
+from repro.cluster.job import (
+    ScanJobResult,
+    ShardedScanResult,
+    read_cluster_manifest,
+    read_progress,
+    run_scan_job,
+    run_sharded_scan_job,
+    shard_ckpt_dir,
+)
+
+__all__ = [
+    "Shard",
+    "ShardPlan",
+    "ScanJobResult",
+    "ShardedScanResult",
+    "map_shard",
+    "mesh_scan_axes",
+    "plan_for_mesh",
+    "plan_shards",
+    "read_cluster_manifest",
+    "read_progress",
+    "reduce_states",
+    "run_scan_job",
+    "run_sharded_scan_job",
+    "scan_shards",
+    "search_mesh",
+    "shard_ckpt_dir",
+]

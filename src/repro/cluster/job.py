@@ -1,0 +1,367 @@
+"""Checkpointed sharded scan jobs — MIREX's cluster, kill/resume per shard.
+
+The Hadoop property the paper leans on (any split can be re-executed and
+re-reduced without changing the answer) holds here at two nested levels:
+
+* **within a shard** — the corpus folds one chunk-aligned *segment* at a
+  time through a single jitted multi-scorer fold; after every segment the
+  stacked ``TopKState`` commits via the atomic-rename checkpointer and a
+  ``progress.json`` manifest is rewritten, so a killed shard restarts from
+  its last committed segment and replays the exact per-chunk instruction
+  stream of an uninterrupted run (bit-identical, test-enforced);
+* **across shards** — each shard owns its own checkpoint directory and
+  progress manifest, fails and resumes independently, and the final
+  :func:`repro.cluster.mapreduce.reduce_states` merge is value-deterministic,
+  so the merged state (and every TREC run file written from it) is
+  byte-identical whatever subset of shards died, resumed, or ran on which
+  device — and byte-identical to the one-shard job, which is literally this
+  code with a trivial plan.
+
+Failure injection mirrors `launch/train.py`: ``fail_at_segment=s`` raises
+after segment ``s``'s checkpoint commits on shard ``fail_at_shard`` — the
+canonical lost-ack kill point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.core import pipeline, topk
+from repro.core.scoring import CollectionStats, Scorer
+
+from repro.cluster.mapreduce import map_shard, reduce_states
+from repro.cluster.plan import ShardPlan, plan_shards
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanJobResult:
+    state: topk.TopKState  # stacked [n_models, n_q, k]
+    segments_run: int  # segments executed by *this* invocation
+    segments_total: int
+    resumed_from: int  # segment index the run started at (0 = fresh)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedScanResult:
+    """Merged result of a sharded job + each shard's own job result."""
+
+    state: topk.TopKState  # merged [n_models, n_q, k]
+    plan: ShardPlan
+    shard_results: tuple[ScanJobResult, ...]
+
+    @property
+    def segments_run(self) -> int:
+        return sum(r.segments_run for r in self.shard_results)
+
+    @property
+    def segments_total(self) -> int:
+        return sum(r.segments_total for r in self.shard_results)
+
+    @property
+    def resumed(self) -> bool:
+        return any(r.resumed_from for r in self.shard_results)
+
+
+def _job_fingerprint(
+    queries, docs, scorers, k: int, chunk_size: int, segment_chunks: int,
+    doc_id_offset: int, stats,
+) -> str:
+    """Cheap identity of (data, grid, chunking, segmentation) — guards resume.
+
+    A checkpointed TopKState from a *different* job can have exactly the same
+    array shapes (same model count / query count / k), so shape checks alone
+    would silently resume the wrong experiment. Hash the configuration, the
+    full query set (small) and a strided row sample of the corpus instead.
+    ``segment_chunks`` matters because the checkpoint step counts *segments*:
+    reinterpreting it under a different segmentation would skip or double-fold
+    corpus rows without any shape mismatch. ``doc_id_offset`` makes every
+    shard of a sharded job a *distinct* job, so shard checkpoints can never
+    be cross-adopted (e.g. after re-planning the same dir at a different
+    shard count).
+    """
+    h = hashlib.sha256()
+    h.update(
+        repr(
+            (k, chunk_size, segment_chunks, doc_id_offset, [s.name for s in scorers])
+        ).encode()
+    )
+    for leaf in jax.tree.leaves(queries):
+        h.update(np.asarray(leaf).tobytes())
+    for leaf in jax.tree.leaves(docs):
+        h.update(repr(tuple(leaf.shape)).encode())
+        stride = max(1, leaf.shape[0] // 64)
+        h.update(np.asarray(leaf[::stride][:64]).tobytes())
+    # stats shape the scores: resuming under different collection statistics
+    # would merge incompatible partial scores without any shape mismatch
+    if stats is not None:
+        for leaf in jax.tree.leaves(stats):
+            h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _write_json(path: str, payload: dict) -> None:
+    tmp = os.path.join(os.path.dirname(path), ".tmp-" + os.path.basename(path))
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.replace(tmp, path)
+
+
+def _write_progress(ckpt_dir: str, payload: dict) -> None:
+    _write_json(os.path.join(ckpt_dir, "progress.json"), payload)
+
+
+def read_progress(ckpt_dir: str) -> dict | None:
+    path = os.path.join(ckpt_dir, "progress.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run_scan_job(
+    queries: Any,
+    docs: Any,
+    scorers: Sequence[Scorer],
+    *,
+    k: int,
+    chunk_size: int,
+    segment_chunks: int,
+    stats: CollectionStats | None = None,
+    ckpt_dir: str | None = None,
+    resume: bool = True,
+    keep_checkpoints: int = 2,
+    fail_at_segment: int | None = None,
+    shard: int = 0,
+    n_shards: int = 1,
+    doc_id_offset: int = 0,
+    use_kernel: bool = False,
+    device: jax.Device | None = None,
+) -> ScanJobResult:
+    """Run (or resume) one shard's checkpointed multi-scorer scan — the map
+    task of the sharded job, and the whole job when the plan has one shard.
+
+    ``ckpt_dir=None`` degrades to a plain uncheckpointed single pass. The
+    checkpoint step number is "segments completed", so ``latest_step`` *is*
+    the resume point; ``keep_checkpoints`` bounds disk via ``ckpt.prune``.
+    ``device`` pins the shard's fold (and its restored state) to one device —
+    how :func:`run_sharded_scan_job` spreads shards over a mesh's devices.
+    """
+    scorers = tuple(scorers)
+    if device is not None:
+        queries = jax.device_put(queries, device)
+        docs = jax.device_put(docs, device)
+    n_rows = jax.tree.leaves(docs)[0].shape[0]
+    n_q = jax.tree.leaves(queries)[0].shape[0]
+    segs = pipeline.segments(n_rows, chunk_size, segment_chunks)
+
+    fingerprint = _job_fingerprint(
+        queries, docs, scorers, k, chunk_size, segment_chunks, doc_id_offset, stats
+    )
+    state = topk.init(k, (len(scorers), n_q))
+    start_seg = 0
+    if ckpt_dir and resume:
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            prev = read_progress(ckpt_dir)
+            if prev is not None and prev.get("fingerprint") != fingerprint:
+                raise ValueError(
+                    f"checkpoint dir {ckpt_dir!r} belongs to a different job "
+                    f"(scorers {prev.get('scorers')}, fingerprint "
+                    f"{prev.get('fingerprint')} != {fingerprint}); use a fresh "
+                    "dir or resume=False"
+                )
+            if latest > len(segs):
+                raise ValueError(
+                    f"checkpoint at segment {latest} but job has {len(segs)} segments"
+                )
+            state = ckpt.restore(ckpt_dir, latest, state)
+            start_seg = latest
+    elif ckpt_dir:
+        # fresh start over a dirty dir: drop stale commits so they can never
+        # masquerade as this run's progress (or out-survive it via prune)
+        for s in ckpt.all_steps(ckpt_dir):
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))
+        stale = os.path.join(ckpt_dir, "progress.json")
+        if os.path.exists(stale):
+            os.remove(stale)
+    if device is not None:
+        state = jax.device_put(state, device)
+
+    @jax.jit
+    def fold_segment(state, seg_docs, offset):
+        return map_shard(
+            queries,
+            seg_docs,
+            scorers,
+            k=k,
+            chunk_size=chunk_size,
+            stats=stats,
+            doc_id_offset=offset,
+            init_state=state,
+            use_kernel=use_kernel,
+        )
+
+    def progress(done: int) -> dict:
+        return {
+            "fingerprint": fingerprint,
+            "n_segments": len(segs),
+            "chunk_size": chunk_size,
+            "segment_chunks": segment_chunks,
+            "k": k,
+            "scorers": [s.name for s in scorers],
+            "shards": {
+                str(shard): {
+                    "n_shards": n_shards,
+                    "doc_id_offset": doc_id_offset,
+                    "segments_done": done,
+                    "rows_done": segs[done - 1][1] if done else 0,
+                    "n_rows": n_rows,
+                    "complete": done == len(segs),
+                }
+            },
+        }
+
+    ran = 0
+    for seg_idx in range(start_seg, len(segs)):
+        a, b = segs[seg_idx]
+        seg_docs = jax.tree.map(lambda x: x[a:b], docs)
+        state = fold_segment(state, seg_docs, jnp.int32(doc_id_offset + a))
+        ran += 1
+        if ckpt_dir:
+            state = jax.block_until_ready(state)
+            ckpt.save(ckpt_dir, seg_idx + 1, state)
+            _write_progress(ckpt_dir, progress(seg_idx + 1))
+            ckpt.prune(ckpt_dir, keep_checkpoints)
+        if fail_at_segment is not None and seg_idx >= fail_at_segment:
+            # die *after* the commit: the canonical lost-ack kill point
+            raise RuntimeError(f"injected failure after segment {seg_idx}")
+    if ckpt_dir and start_seg == len(segs):
+        _write_progress(ckpt_dir, progress(len(segs)))  # idempotent re-run
+    return ScanJobResult(
+        state=state,
+        segments_run=ran,
+        segments_total=len(segs),
+        resumed_from=start_seg,
+    )
+
+
+def shard_ckpt_dir(ckpt_dir: str, plan: ShardPlan, index: int) -> str:
+    """Shard ``index``'s checkpoint directory under the job's ``ckpt_dir``.
+
+    The one-shard plan *is* the classic single-host job, flat layout and all
+    — the special case the sharded job degrades to, not a parallel code path.
+    """
+    if plan.n_shards == 1:
+        return ckpt_dir
+    return os.path.join(ckpt_dir, f"shard_{index:04d}")
+
+
+def read_cluster_manifest(ckpt_dir: str) -> dict | None:
+    path = os.path.join(ckpt_dir, "cluster.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run_sharded_scan_job(
+    queries: Any,
+    docs: Any,
+    scorers: Sequence[Scorer],
+    *,
+    k: int,
+    chunk_size: int,
+    segment_chunks: int,
+    plan: ShardPlan | None = None,
+    n_shards: int = 1,
+    stats: CollectionStats | None = None,
+    ckpt_dir: str | None = None,
+    resume: bool = True,
+    keep_checkpoints: int = 2,
+    fail_at_segment: int | None = None,
+    fail_at_shard: int = 0,
+    use_kernel: bool = False,
+    devices: Sequence[jax.Device] | None = None,
+) -> ShardedScanResult:
+    """Run (or resume) a full sharded scan job: map every shard, reduce once.
+
+    Pass a :class:`ShardPlan` (e.g. from ``plan_for_mesh``) or just
+    ``n_shards`` to cut one here. Each shard runs :func:`run_scan_job` in its
+    own checkpoint directory (``<ckpt_dir>/shard_NNNN``; the one-shard plan
+    uses ``ckpt_dir`` itself — the classic single-host layout), so shards
+    fail and resume independently; completed shards replay as no-op restores.
+    ``devices`` spreads shards round-robin (``jax.devices()`` for the
+    virtual-device smoke grid; real meshes at multi-process scale).
+
+    The final merged state is byte-identical for every shard count — chunk
+    alignment keeps per-chunk score bytes equal and the lexicographic reduce
+    is value-deterministic — so run files written from it satisfy the same
+    fingerprint contract as the single-host job.
+    """
+    n_rows = jax.tree.leaves(docs)[0].shape[0]
+    if plan is None:
+        plan = plan_shards(n_rows, n_shards=n_shards, chunk_size=chunk_size)
+    if plan.n_docs != n_rows:
+        raise ValueError(f"docs have {n_rows} rows but plan covers {plan.n_docs}")
+    if plan.chunk_size != chunk_size:
+        raise ValueError(
+            f"plan chunk_size {plan.chunk_size} != job chunk_size {chunk_size}"
+        )
+
+    if ckpt_dir and plan.n_shards > 1:
+        manifest = read_cluster_manifest(ckpt_dir)
+        if manifest is not None and resume and manifest["plan"] != plan.describe():
+            raise ValueError(
+                f"checkpoint dir {ckpt_dir!r} holds a different shard plan "
+                f"({manifest['plan']['n_shards']} shards over "
+                f"{manifest['plan']['n_docs']} docs); use a fresh dir or "
+                "resume=False"
+            )
+        os.makedirs(ckpt_dir, exist_ok=True)
+        _write_json(
+            os.path.join(ckpt_dir, "cluster.json"),
+            {"plan": plan.describe(), "scorers": [s.name for s in scorers], "k": k},
+        )
+
+    results: list[ScanJobResult] = []
+    for shard in plan.shards:
+        device = None
+        if devices:
+            device = devices[shard.index % len(devices)]
+        results.append(
+            run_scan_job(
+                queries,
+                shard.take(docs),
+                scorers,
+                k=k,
+                chunk_size=chunk_size,
+                segment_chunks=segment_chunks,
+                stats=stats,
+                ckpt_dir=shard_ckpt_dir(ckpt_dir, plan, shard.index) if ckpt_dir else None,
+                resume=resume,
+                keep_checkpoints=keep_checkpoints,
+                fail_at_segment=fail_at_segment if shard.index == fail_at_shard else None,
+                shard=shard.index,
+                n_shards=plan.n_shards,
+                doc_id_offset=shard.doc_id_offset,
+                use_kernel=use_kernel,
+                device=device,
+            )
+        )
+
+    states = [r.state for r in results]
+    if devices:
+        # reduce on one device: shard states live where their folds ran
+        states = [jax.device_put(s, devices[0]) for s in states]
+    merged = reduce_states(states)
+    return ShardedScanResult(state=merged, plan=plan, shard_results=tuple(results))

@@ -1,0 +1,193 @@
+"""The cluster's map and reduce: per-shard scan folds + the one merge.
+
+Paper §2, literally: **map** = sequentially scan one shard of the collection
+against the full query (and model-grid) block; **reduce** = merge per-shard
+top-k lists, at most ``k`` entries per query per shard ever crossing a
+shard boundary. Both halves are the *same code* on every execution substrate:
+
+* :func:`map_shard` is the single fold every shard runs — multi-model
+  single-pass (`scan.search_local_multi`), fused Pallas lexical kernel under
+  ``use_kernel``, sentinel-preserving global doc ids via the shard's offset.
+* :func:`reduce_states` is the k-bounded lexicographic bitonic merge
+  (`topk.reduce_lex`): value-deterministic, so 1/2/4/N shards merge to the
+  same bits, which is the shard-count-invariance contract jobs and serve
+  both inherit.
+* :func:`search_mesh` stamps the two onto a JAX mesh with ``shard_map`` —
+  corpus sharded over the scan axes, queries/stats replicated, local map,
+  hierarchical lexicographic reduce — for one-shot and serve-path scans.
+  Checkpointed jobs use the host-loop driver in `cluster.job` instead (a
+  shard that lives inside one XLA program can't kill/resume independently).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro import compat
+from repro.core import scan, topk
+from repro.core.scoring import CollectionStats, Scorer
+
+from repro.cluster.plan import ShardPlan, mesh_scan_axes
+
+
+def map_shard(
+    queries: Any,
+    shard_docs: Any,
+    scorers: Sequence[Scorer],
+    *,
+    k: int,
+    chunk_size: int,
+    stats: CollectionStats | None = None,
+    doc_id_offset: jax.Array | int = 0,
+    init_state: topk.TopKState | None = None,
+    use_kernel: bool = False,
+) -> topk.TopKState:
+    """The map task: fold one shard into a stacked ``[n_models, n_q, k]`` state.
+
+    A thin, named seam over `scan.search_local_multi` — jobs, the mesh path,
+    and serve sessions all dispatch the same fold, so "works under sharding"
+    is one property proven once. Dense single-model kernel scans route
+    through `scan.search_local` (the fused dense kernel has no grid axis) and
+    are re-stacked to the grid shape.
+    """
+    scorers = tuple(scorers)
+    if use_kernel and len(scorers) == 1 and scorers[0].kind == "dense":
+        flat = scan.search_local(
+            queries, shard_docs, scorers[0], k=k, chunk_size=chunk_size,
+            stats=stats, doc_id_offset=doc_id_offset, use_kernel=True,
+        )
+        state = topk.TopKState(scores=flat.scores[None], ids=flat.ids[None])
+        return state if init_state is None else topk.merge(init_state, state)
+    return scan.search_local_multi(
+        queries,
+        shard_docs,
+        scorers,
+        k=k,
+        chunk_size=chunk_size,
+        stats=stats,
+        doc_id_offset=doc_id_offset,
+        init_state=init_state,
+        use_kernel=use_kernel,
+    )
+
+
+def reduce_states(states: Sequence[topk.TopKState]) -> topk.TopKState:
+    """The reduce task: lexicographic k-bounded merge of per-shard states.
+
+    Order- and grouping-free (`topk.reduce_lex`), so the host loop, the mesh
+    all-gather, and a future multi-process tree all produce the same bits.
+    """
+    return topk.reduce_lex(states)
+
+
+def scan_shards(
+    plan: ShardPlan,
+    queries: Any,
+    docs: Any,
+    scorers: Sequence[Scorer],
+    *,
+    k: int,
+    stats: CollectionStats | None = None,
+    use_kernel: bool = False,
+    devices: Sequence[jax.Device] | None = None,
+) -> topk.TopKState:
+    """Uncheckpointed host-driven sharded scan: map every shard, reduce once.
+
+    ``devices`` places shard ``i`` on ``devices[i % len(devices)]``
+    (round-robin over the mesh's devices when the plan came from a mesh) —
+    the degenerate None runs every shard on the default device, which is the
+    substrate the shard-count-invariance tests pin down. Checkpointed /
+    resumable execution lives in `cluster.job.run_sharded_scan_job`.
+    """
+    n_rows = jax.tree.leaves(docs)[0].shape[0]
+    if n_rows != plan.n_docs:
+        raise ValueError(f"docs have {n_rows} rows but plan covers {plan.n_docs}")
+    states = []
+    for shard in plan.shards:
+        shard_docs = shard.take(docs)
+        q = queries
+        if devices:
+            dev = devices[shard.index % len(devices)]
+            shard_docs = jax.device_put(shard_docs, dev)
+            q = jax.device_put(queries, dev)
+        states.append(
+            map_shard(
+                q, shard_docs, scorers,
+                k=k, chunk_size=plan.chunk_size, stats=stats,
+                doc_id_offset=shard.doc_id_offset, use_kernel=use_kernel,
+            )
+        )
+    if devices:
+        states = [jax.device_put(s, devices[0]) for s in states]
+    return reduce_states(states)
+
+
+def search_mesh(
+    mesh: Mesh,
+    queries: Any,
+    docs: Any,
+    scorers: Sequence[Scorer] | Scorer,
+    *,
+    k: int,
+    chunk_size: int,
+    stats: CollectionStats | None = None,
+    axis_names: tuple[str, ...] | None = None,
+    use_kernel: bool = False,
+):
+    """Full MIREX job as one XLA program: ``shard_map`` over the mesh.
+
+    Corpus sharded over ``axis_names`` (default: every mesh axis — the
+    logical "scan" axis), queries and stats replicated; each shard runs
+    :func:`map_shard` (multi-model, kernel-dispatched), then the
+    hierarchical lexicographic reduce replicates the merged state.
+
+    Returns a jitted ``(queries, docs, stats) -> TopKState`` with stacked
+    ``[n_models, n_q, k]`` shapes (``n_models == 1`` for a single scorer —
+    callers index ``[0]`` or keep the grid axis).
+    """
+    scorers = (scorers,) if isinstance(scorers, Scorer) else tuple(scorers)
+    if axis_names is None:
+        axis_names = mesh_scan_axes(mesh)
+    doc_spec = P(axis_names)  # shard the leading (document) dim
+    docs_specs = jax.tree.map(lambda _: doc_spec, docs)
+    q_specs = jax.tree.map(lambda _: P(), queries)
+    stats_specs = None if stats is None else jax.tree.map(lambda _: P(), stats)
+
+    n_shards = 1
+    for a in axis_names:
+        n_shards *= mesh.shape[a]
+    n_docs_total = jax.tree.leaves(docs)[0].shape[0]
+    if n_docs_total % n_shards:
+        raise ValueError(f"{n_docs_total} docs not divisible by {n_shards} shards")
+    per_shard = n_docs_total // n_shards
+
+    def local_job(queries, docs, stats):
+        # global shard index = flattened index over the sharding axes
+        idx = 0
+        for a in axis_names:
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
+        state = map_shard(
+            queries,
+            docs,
+            scorers,
+            k=k,
+            chunk_size=chunk_size,
+            stats=stats,
+            doc_id_offset=idx * per_shard,
+            use_kernel=use_kernel,
+        )
+        return topk.merge_across_lex(state, axis_names)
+
+    sharded = shard_map(
+        local_job,
+        mesh=mesh,
+        in_specs=(q_specs, docs_specs, stats_specs),
+        out_specs=topk.TopKState(P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(functools.partial(sharded))

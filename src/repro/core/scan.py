@@ -12,8 +12,9 @@ Layering:
     chunk streams through HBM once for the whole grid, and for lexical
     grids the term-frequency reduction is computed once per chunk and
     shared (the experiment-side amortization mirroring claim C1).
-  * :func:`search_sharded` — shard_map over the mesh: local search + the
-    combiner-bounded top-k merge (`topk.merge_across`).
+  * mesh execution lives one layer up in `repro.cluster` (shard plans,
+    shard_map scans, sharded jobs); :func:`search_sharded` remains as a
+    deprecated alias for `repro.cluster.search_mesh`.
   * dense-path hot loop optionally dispatches to the Pallas fused
     score+top-k kernel (`repro.kernels.ops.score_topk`).
 """
@@ -25,10 +26,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
-from repro import compat
 from repro.core import pipeline, scoring, topk
 from repro.core.scoring import CollectionStats, Scorer
 
@@ -192,52 +191,39 @@ def search_sharded(
     use_kernel: bool = False,
     tree_merge: bool = False,
 ):
-    """Full MIREX job on a mesh: corpus sharded over ``axis_names``, queries
-    replicated, per-shard scan, then the k-bounded distributed merge.
+    """Deprecated alias for :func:`repro.cluster.search_mesh`.
 
-    Returns a jitted callable ``(queries, docs[, stats]) -> TopKState`` with
-    global doc ids, replicated on every device.
+    The mesh scan moved into the unified map/reduce layer (`repro.cluster`),
+    which fixes this wrapper's dropped capabilities — ``use_kernel`` is now
+    honored and whole model grids scan in one pass — and reduces through the
+    same lexicographic merge as sharded jobs and serve sessions. This shim
+    keeps the old single-scorer return shape (``[n_q, k]``) by squeezing the
+    grid axis; ``tree_merge`` is ignored (the hierarchical lexicographic
+    reduce bounds the gather buffer at ``axis_size·k`` already).
     """
-    doc_spec = P(axis_names)  # shard leading (document) dim
-    docs_specs = jax.tree.map(lambda _: doc_spec, docs)
-    q_specs = jax.tree.map(lambda _: P(), queries)
-    stats_specs = None if stats is None else jax.tree.map(lambda _: P(), stats)
+    import warnings
 
-    n_shards = 1
-    for a in axis_names:
-        n_shards *= mesh.shape[a]
-    n_docs_total = jax.tree.leaves(docs)[0].shape[0]
-    if n_docs_total % n_shards:
-        raise ValueError(f"{n_docs_total} docs not divisible by {n_shards} shards")
-    per_shard = n_docs_total // n_shards
-
-    def local_job(queries, docs, stats):
-        # global shard index = flattened index over the sharding axes
-        idx = 0
-        for a in axis_names:
-            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
-        state = search_local(
-            queries,
-            docs,
-            scorer,
-            k=k,
-            chunk_size=chunk_size,
-            stats=stats,
-            doc_id_offset=idx * per_shard,
-            use_kernel=use_kernel,
-        )
-        if tree_merge and len(axis_names) == 1:
-            return topk.merge_across_tree(state, axis_names[0])
-        return topk.merge_across(state, axis_names)
-
-    sharded = shard_map(
-        local_job,
-        mesh=mesh,
-        in_specs=(q_specs, docs_specs, stats_specs),
-        out_specs=topk.TopKState(P(), P()),
-        check_rep=False,
+    warnings.warn(
+        "scan.search_sharded is deprecated; use repro.cluster.search_mesh "
+        "(multi-model, kernel-dispatched, shared merge contract)",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    return jax.jit(functools.partial(sharded))
+    del tree_merge
+    from repro import cluster  # local import: scan is cluster's lower layer
+
+    fn = cluster.search_mesh(
+        mesh, queries, docs, scorer,
+        k=k, chunk_size=chunk_size, stats=stats,
+        axis_names=axis_names, use_kernel=use_kernel,
+    )
+
+    @functools.wraps(fn)
+    def squeezed(queries, docs, stats=None):
+        state = fn(queries, docs, stats)
+        return topk.TopKState(scores=state.scores[0], ids=state.ids[0])
+
+    return squeezed
 
 
 def search_dense_host(q_vecs, d_vecs, k: int):

@@ -71,6 +71,76 @@ def merge(a: TopKState, b: TopKState) -> TopKState:
     return update(a, b.scores, b.ids)
 
 
+def merge_lex(a: TopKState, b: TopKState) -> TopKState:
+    """k-bounded **lexicographic** merge — the cluster reduce contract.
+
+    Both inputs must be sorted by (score desc, id asc), which every fold in
+    this framework produces (``lax.top_k``'s positional tie-break over a
+    monotone-id candidate stream *is* that order; the Pallas combiner sorts
+    by it explicitly). The merge is one O(k log k) bitonic merge network
+    (`kernels.score_topk.bitonic_merge_desc`), so its output is a pure
+    function of the two value sets — no positional tie-break, no dependence
+    on merge order or shard count. That value-determinism is what makes
+    cross-shard rankings id-exact (and score-byte-exact) against a
+    single-host oracle scan, which `repro.cluster` turns into the
+    shard-count-invariance guarantee for merged TREC run files.
+
+    Inputs are right-padded to a power-of-two width with ``(-inf, -1)``
+    empty slots; a fold-produced state never holds a real-id entry at
+    ``-inf`` (sentinels win that tie in both the host fold and the kernel
+    combiner), so the padding preserves (score desc, id asc) sortedness.
+    """
+    # local import: core stays importable when the Pallas toolchain is absent
+    from repro.kernels.score_topk import _pad_desc, bitonic_merge_desc
+
+    if a.scores.shape != b.scores.shape:
+        raise ValueError(f"merge_lex shape mismatch: {a.scores.shape} != {b.scores.shape}")
+    k = a.k
+    width = 1 if k <= 1 else 1 << (k - 1).bit_length()  # next pow2
+    a_s, a_i = _pad_desc(a.scores, a.ids, width)
+    b_s, b_i = _pad_desc(b.scores, b.ids, width)
+    s, i = bitonic_merge_desc(a_s, a_i, b_s, b_i)
+    return TopKState(scores=s[..., :k], ids=i[..., :k])
+
+
+def reduce_lex(states) -> TopKState:
+    """Fold any number of per-shard states through :func:`merge_lex`.
+
+    Associative + value-deterministic, so grouping and shard order are free
+    to vary (host loop, mesh all-gather, tree) without changing a bit of the
+    result.
+    """
+    states = list(states)
+    if not states:
+        raise ValueError("reduce_lex needs at least one state")
+    out = states[0]
+    for s in states[1:]:
+        out = merge_lex(out, s)
+    return out
+
+
+def merge_across_lex(state: TopKState, axis_name: str | tuple[str, ...]) -> TopKState:
+    """Global lexicographic reduce across mesh axes (inside ``shard_map``).
+
+    Same hierarchical staging as :func:`merge_across` (one stage per axis,
+    re-reducing to k between stages, bounding the gather buffer at
+    ``axis_size·k``), but folding with :func:`merge_lex` so the mesh reduce
+    and the host-loop reduce (`repro.cluster`) share one merge contract.
+    """
+    if isinstance(axis_name, (tuple, list)):
+        for a in axis_name:
+            state = merge_across_lex(state, a)
+        return state
+    gathered = TopKState(
+        scores=jax.lax.all_gather(state.scores, axis_name, axis=0, tiled=False),
+        ids=jax.lax.all_gather(state.ids, axis_name, axis=0, tiled=False),
+    )
+    n = gathered.scores.shape[0]
+    return reduce_lex(
+        TopKState(scores=gathered.scores[i], ids=gathered.ids[i]) for i in range(n)
+    )
+
+
 def merge_across(
     state: TopKState, axis_name: str | tuple[str, ...], *, method: str = "staged"
 ) -> TopKState:

@@ -29,6 +29,20 @@ class AxisRules:
     def all_axes(self) -> tuple[str, ...]:
         return (*self.dp, self.tp)
 
+    @property
+    def scan_axes(self) -> tuple[str, ...]:
+        """Physical axes behind the logical "scan" axis — every mesh axis.
+
+        The corpus-scan vocabulary `repro.cluster` plans over
+        (`cluster.plan_for_mesh`, `cluster.search_mesh`): a MIREX scan wants
+        all chips owning documents, so "scan" flattens the whole mesh.
+        Deduplicated: on a single-axis mesh the degenerate
+        :func:`rules_for_mesh` fallback maps dp and tp to the *same* axis,
+        and a repeated name would double-count shards (and build an invalid
+        duplicate-axis PartitionSpec).
+        """
+        return tuple(dict.fromkeys(self.all_axes))
+
     def spec(self, *logical: str | None) -> P:
         """Build a PartitionSpec from logical axis names per dim."""
         return P(*[logical_to_spec(self, name) for name in logical])

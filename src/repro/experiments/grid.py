@@ -88,6 +88,7 @@ class ExperimentSpec:
     k: int = 20
     chunk_size: int = 512
     segment_chunks: int = 4  # chunks per checkpoint segment
+    n_shards: int = 1  # corpus scan shards (repro.cluster sharded job)
     use_kernel: bool = False  # fused Pallas lexical kernel for the scan job
     eval_ks: tuple[int, ...] = (5, 10, 20)
     baseline: str | None = None  # variant name significance is tested against

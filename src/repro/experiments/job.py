@@ -1,214 +1,31 @@
-"""Resumable multi-scorer scan jobs — Hadoop-style fault tolerance for scans.
+"""Resumable scan jobs — now the one-shard special case of `repro.cluster`.
 
-The MapReduce lineage of the paper (and of Goodrich et al.'s simulation
-framework) gets its fault tolerance from one property: map outputs fold into
-an **associative combiner**, so any split can be re-executed and re-reduced
-without changing the result. `core/pipeline.py` already guarantees that for
-the top-k state; this module turns it into an operational contract:
+The checkpointed multi-scorer scan engine that lived here moved to
+`repro.cluster.job` when jobs grew mesh-sharded execution (PR 4): a
+single-host scan job is exactly a sharded job with a trivial one-shard plan,
+so `run_scan_job` *is* the cluster engine's shard runner, re-exported with
+its original signature. Sharded jobs (per-shard checkpoints + kill/resume,
+byte-identical merged run files at any shard count) are
+`repro.cluster.run_sharded_scan_job`.
 
-  * the corpus is folded one chunk-aligned *segment* at a time
-    (`pipeline.segments`), through a single jitted multi-scorer fold;
-  * after every segment the stacked ``TopKState`` is committed with the
-    atomic-rename checkpointer (`repro.checkpoint`) and a ``progress.json``
-    per-shard manifest is rewritten;
-  * a killed job restarts from its last committed segment and produces a
-    **bit-identical** final state (and therefore a byte-identical TREC run
-    file) — checkpoints store exact f32/int32 bytes and every segment
-    boundary is a chunk boundary, so the resumed fold replays the exact
-    per-chunk instruction stream of an uninterrupted run (test-enforced).
-
-Failure injection mirrors `launch/train.py`: ``fail_at_segment=s`` raises
-after segment ``s``'s checkpoint commits, which is exactly the worst-case
-kill point (work done, acknowledgment lost).
+This module stays as the experiments-facing import path; everything here is
+a re-export.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-import json
-import os
-import shutil
-from typing import Any, Sequence
+from repro.cluster.job import (  # noqa: F401
+    ScanJobResult,
+    ShardedScanResult,
+    read_progress,
+    run_scan_job,
+    run_sharded_scan_job,
+)
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import checkpoint as ckpt
-from repro.core import pipeline, scan, topk
-from repro.core.scoring import CollectionStats, Scorer
-
-
-@dataclasses.dataclass(frozen=True)
-class ScanJobResult:
-    state: topk.TopKState  # stacked [n_models, n_q, k]
-    segments_run: int  # segments executed by *this* invocation
-    segments_total: int
-    resumed_from: int  # segment index the run started at (0 = fresh)
-
-
-def _job_fingerprint(
-    queries, docs, scorers, k: int, chunk_size: int, segment_chunks: int,
-    doc_id_offset: int, stats,
-) -> str:
-    """Cheap identity of (data, grid, chunking, segmentation) — guards resume.
-
-    A checkpointed TopKState from a *different* job can have exactly the same
-    array shapes (same model count / query count / k), so shape checks alone
-    would silently resume the wrong experiment. Hash the configuration, the
-    full query set (small) and a strided row sample of the corpus instead.
-    ``segment_chunks`` matters because the checkpoint step counts *segments*:
-    reinterpreting it under a different segmentation would skip or double-fold
-    corpus rows without any shape mismatch.
-    """
-    h = hashlib.sha256()
-    h.update(
-        repr(
-            (k, chunk_size, segment_chunks, doc_id_offset, [s.name for s in scorers])
-        ).encode()
-    )
-    for leaf in jax.tree.leaves(queries):
-        h.update(np.asarray(leaf).tobytes())
-    for leaf in jax.tree.leaves(docs):
-        h.update(repr(tuple(leaf.shape)).encode())
-        stride = max(1, leaf.shape[0] // 64)
-        h.update(np.asarray(leaf[::stride][:64]).tobytes())
-    # stats shape the scores: resuming under different collection statistics
-    # would merge incompatible partial scores without any shape mismatch
-    if stats is not None:
-        for leaf in jax.tree.leaves(stats):
-            h.update(np.asarray(leaf).tobytes())
-    return h.hexdigest()[:16]
-
-
-def _write_progress(ckpt_dir: str, payload: dict) -> None:
-    tmp = os.path.join(ckpt_dir, ".tmp-progress.json")
-    with open(tmp, "w") as f:
-        json.dump(payload, f, indent=2)
-    os.replace(tmp, os.path.join(ckpt_dir, "progress.json"))
-
-
-def read_progress(ckpt_dir: str) -> dict | None:
-    path = os.path.join(ckpt_dir, "progress.json")
-    if not os.path.exists(path):
-        return None
-    with open(path) as f:
-        return json.load(f)
-
-
-def run_scan_job(
-    queries: Any,
-    docs: Any,
-    scorers: Sequence[Scorer],
-    *,
-    k: int,
-    chunk_size: int,
-    segment_chunks: int,
-    stats: CollectionStats | None = None,
-    ckpt_dir: str | None = None,
-    resume: bool = True,
-    keep_checkpoints: int = 2,
-    fail_at_segment: int | None = None,
-    shard: int = 0,
-    n_shards: int = 1,
-    doc_id_offset: int = 0,
-    use_kernel: bool = False,
-) -> ScanJobResult:
-    """Run (or resume) a checkpointed multi-scorer scan over a corpus shard.
-
-    ``ckpt_dir=None`` degrades to a plain uncheckpointed single pass. The
-    checkpoint step number is "segments completed", so ``latest_step`` *is*
-    the resume point; ``keep_checkpoints`` bounds disk via ``ckpt.prune``.
-    """
-    scorers = tuple(scorers)
-    n_rows = jax.tree.leaves(docs)[0].shape[0]
-    n_q = jax.tree.leaves(queries)[0].shape[0]
-    segs = pipeline.segments(n_rows, chunk_size, segment_chunks)
-
-    fingerprint = _job_fingerprint(
-        queries, docs, scorers, k, chunk_size, segment_chunks, doc_id_offset, stats
-    )
-    state = topk.init(k, (len(scorers), n_q))
-    start_seg = 0
-    if ckpt_dir and resume:
-        latest = ckpt.latest_step(ckpt_dir)
-        if latest is not None:
-            prev = read_progress(ckpt_dir)
-            if prev is not None and prev.get("fingerprint") != fingerprint:
-                raise ValueError(
-                    f"checkpoint dir {ckpt_dir!r} belongs to a different job "
-                    f"(scorers {prev.get('scorers')}, fingerprint "
-                    f"{prev.get('fingerprint')} != {fingerprint}); use a fresh "
-                    "dir or resume=False"
-                )
-            if latest > len(segs):
-                raise ValueError(
-                    f"checkpoint at segment {latest} but job has {len(segs)} segments"
-                )
-            state = ckpt.restore(ckpt_dir, latest, state)
-            start_seg = latest
-    elif ckpt_dir:
-        # fresh start over a dirty dir: drop stale commits so they can never
-        # masquerade as this run's progress (or out-survive it via prune)
-        for s in ckpt.all_steps(ckpt_dir):
-            shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))
-        stale = os.path.join(ckpt_dir, "progress.json")
-        if os.path.exists(stale):
-            os.remove(stale)
-
-    @jax.jit
-    def fold_segment(state, seg_docs, offset):
-        return scan.search_local_multi(
-            queries,
-            seg_docs,
-            scorers,
-            k=k,
-            chunk_size=chunk_size,
-            stats=stats,
-            doc_id_offset=offset,
-            init_state=state,
-            use_kernel=use_kernel,
-        )
-
-    def progress(done: int) -> dict:
-        return {
-            "fingerprint": fingerprint,
-            "n_segments": len(segs),
-            "chunk_size": chunk_size,
-            "segment_chunks": segment_chunks,
-            "k": k,
-            "scorers": [s.name for s in scorers],
-            "shards": {
-                str(shard): {
-                    "n_shards": n_shards,
-                    "segments_done": done,
-                    "rows_done": segs[done - 1][1] if done else 0,
-                    "n_rows": n_rows,
-                    "complete": done == len(segs),
-                }
-            },
-        }
-
-    ran = 0
-    for seg_idx in range(start_seg, len(segs)):
-        a, b = segs[seg_idx]
-        seg_docs = jax.tree.map(lambda x: x[a:b], docs)
-        state = fold_segment(state, seg_docs, jnp.int32(doc_id_offset + a))
-        ran += 1
-        if ckpt_dir:
-            state = jax.block_until_ready(state)
-            ckpt.save(ckpt_dir, seg_idx + 1, state)
-            _write_progress(ckpt_dir, progress(seg_idx + 1))
-            ckpt.prune(ckpt_dir, keep_checkpoints)
-        if fail_at_segment is not None and seg_idx >= fail_at_segment:
-            # die *after* the commit: the canonical lost-ack kill point
-            raise RuntimeError(f"injected failure after segment {seg_idx}")
-    if ckpt_dir and start_seg == len(segs):
-        _write_progress(ckpt_dir, progress(len(segs)))  # idempotent re-run
-    return ScanJobResult(
-        state=state,
-        segments_run=ran,
-        segments_total=len(segs),
-        resumed_from=start_seg,
-    )
+__all__ = [
+    "ScanJobResult",
+    "ShardedScanResult",
+    "read_progress",
+    "run_scan_job",
+    "run_sharded_scan_job",
+]

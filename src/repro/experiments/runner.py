@@ -26,11 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster import plan_shards, run_sharded_scan_job
 from repro.core import anchors, topk
 from repro.data import synthetic
 from repro.eval import evaluate_run, paired_randomization_test, trec
 from repro.experiments.grid import ExperimentSpec
-from repro.experiments.job import ScanJobResult, run_scan_job
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,12 +87,16 @@ def run_experiment(
     seed: int = 0,
     resume: bool = True,
     fail_at_segment: int | None = None,
+    fail_at_shard: int = 0,
     collection: Collection | None = None,
 ) -> dict:
     """Execute the full lifecycle; returns (and writes) the report dict.
 
     Artifacts under ``out_dir``: ``runs/<variant>.run``, ``qrels.txt``,
-    ``ckpt/`` (segment checkpoints + progress manifest), ``report.json``.
+    ``ckpt/`` (segment checkpoints + progress manifests; per-shard subdirs
+    when ``spec.n_shards > 1``), ``report.json``. Run files are byte-
+    identical at every shard count (the `repro.cluster` merge contract), so
+    shard count is an execution knob, not part of the experiment identity.
     """
     # clamp eval cutoffs to the run depth up front — failing in evaluation
     # after the whole scan job ran would discard all the work
@@ -103,18 +107,30 @@ def run_experiment(
     scorers = spec.scorers()
     docs = (jnp.asarray(coll.corpus.tokens), jnp.asarray(coll.corpus.lengths))
 
-    job = run_scan_job(
+    # the scan is a cluster job at every shard count: n_shards=1 is the
+    # classic single-host layout, >1 adds per-shard checkpoints/kill/resume
+    # and a merge whose output is byte-identical to the one-shard run.
+    # shards spread round-robin over the visible devices (one device = a
+    # host-sequential cluster, the paper's own execution model).
+    plan = plan_shards(
+        spec.n_docs, n_shards=spec.n_shards, chunk_size=spec.chunk_size
+    )
+    devices = jax.devices() if spec.n_shards > 1 else None
+    job = run_sharded_scan_job(
         jnp.asarray(coll.queries),
         docs,
         scorers,
         k=spec.k,
         chunk_size=spec.chunk_size,
         segment_chunks=spec.segment_chunks,
+        plan=plan,
         stats=coll.stats,
         ckpt_dir=os.path.join(out_dir, "ckpt"),
         resume=resume,
         fail_at_segment=fail_at_segment,
+        fail_at_shard=fail_at_shard,
         use_kernel=spec.use_kernel,
+        devices=devices,
     )
 
     run_paths = write_run_files(
@@ -150,9 +166,18 @@ def run_experiment(
         "k": spec.k,
         "models": [s.name for s in scorers],
         "job": {
+            "n_shards": job.plan.n_shards,
             "segments_total": job.segments_total,
             "segments_run": job.segments_run,
-            "resumed_from": job.resumed_from,
+            "resumed_from": max(r.resumed_from for r in job.shard_results),
+            "shards": [
+                {
+                    "segments_total": r.segments_total,
+                    "segments_run": r.segments_run,
+                    "resumed_from": r.resumed_from,
+                }
+                for r in job.shard_results
+            ],
         },
         "runs": run_paths,
         "metrics": reports,

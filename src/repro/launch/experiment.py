@@ -50,6 +50,8 @@ def _spec_from_args(args) -> exp_grid.ExperimentSpec:
             ("k", args.k),
             ("chunk_size", args.chunk_size),
             ("segment_chunks", args.segment_chunks),
+            ("n_shards", args.n_shards),
+            ("use_kernel", args.use_kernel or None),
         )
         if v is not None
     }
@@ -60,10 +62,11 @@ def _spec_from_args(args) -> exp_grid.ExperimentSpec:
 def print_report(report: dict) -> None:
     job = report["job"]
     resumed = f", resumed from segment {job['resumed_from']}" if job["resumed_from"] else ""
+    shards = f", {job['n_shards']} shards" if job.get("n_shards", 1) > 1 else ""
     print(
         f"== experiment {report['experiment']}: {len(report['models'])} models, "
         f"one pass over {report['n_docs']} docs × {report['n_queries']} queries "
-        f"({job['segments_total']} checkpointed segments{resumed}) =="
+        f"({job['segments_total']} checkpointed segments{shards}{resumed}) =="
     )
     metric_names = list(next(iter(report["metrics"].values())))
     header = "model".ljust(34) + "".join(m.rjust(10) for m in metric_names)
@@ -97,6 +100,13 @@ def main():
     ap.add_argument("--chunk-size", type=int, default=None)
     ap.add_argument("--segment-chunks", type=int, default=None,
                     help="corpus chunks per checkpoint segment")
+    ap.add_argument("--n-shards", type=int, default=None,
+                    help="corpus scan shards (repro.cluster sharded job; run "
+                         "files are byte-identical at every shard count)")
+    ap.add_argument("--fail-at-shard", type=int, default=0,
+                    help="shard the injected failure fires on (testing)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="scan through the fused Pallas lexical kernel")
     ap.add_argument("--no-resume", action="store_true",
                     help="ignore existing segment checkpoints")
     ap.add_argument("--fail-at-segment", type=int, default=None,
@@ -116,6 +126,7 @@ def main():
         seed=args.seed,
         resume=not args.no_resume,
         fail_at_segment=args.fail_at_segment,
+        fail_at_shard=args.fail_at_shard,
         collection=coll,
     )
     print_report(report)

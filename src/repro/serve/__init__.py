@@ -5,6 +5,9 @@ Public surface:
 * :class:`~repro.serve.service.RetrievalService` — submit/poll/drain facade.
 * :class:`~repro.serve.session.LexicalSession` /
   :class:`~repro.serve.session.DenseSession` — resident-corpus scan state.
+* :class:`~repro.serve.session.ShardedLexicalSession` — the same session
+  surface with the corpus resident *sharded* across a JAX mesh, reducing
+  through the `repro.cluster` merge contract.
 * :class:`~repro.serve.microbatch.Microbatcher` — deadline/size triggers +
   MXU-bucket padding (importable standalone for tests).
 * :mod:`repro.serve.bench` — the C1 batch-size/latency sweep.
@@ -12,7 +15,7 @@ Public surface:
 
 from repro.serve.microbatch import Microbatcher, QueryBlock, SearchRequest
 from repro.serve.service import BatchRecord, RetrievalService, SearchResult
-from repro.serve.session import DenseSession, LexicalSession
+from repro.serve.session import DenseSession, LexicalSession, ShardedLexicalSession
 
 __all__ = [
     "BatchRecord",
@@ -23,4 +26,5 @@ __all__ = [
     "RetrievalService",
     "SearchRequest",
     "SearchResult",
+    "ShardedLexicalSession",
 ]

@@ -25,7 +25,7 @@ from typing import Callable, Mapping
 import numpy as np
 
 from repro.serve.microbatch import Microbatcher, QueryBlock, unpad_results
-from repro.serve.session import DenseSession, LexicalSession
+from repro.serve.session import DenseSession, LexicalSession, ShardedLexicalSession
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +58,7 @@ class RetrievalService:
 
     def __init__(
         self,
-        sessions: Mapping[str, LexicalSession | DenseSession],
+        sessions: Mapping[str, LexicalSession | DenseSession | ShardedLexicalSession],
         *,
         max_batch: int = 64,
         max_delay: float = 5e-3,

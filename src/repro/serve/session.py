@@ -6,7 +6,10 @@ plus a jitted scan handler. The handler is traced once per padded batch
 bucket (``jax.jit`` caches by shape; the microbatcher's power-of-two
 buckets bound the number of traces), so steady-state serving never
 recompiles. This is the paper's "keep the collection on the cluster,
-ship only queries and top-k back" discipline, with HBM as the cluster.
+ship only queries and top-k back" discipline, with HBM as the cluster —
+and with a real mesh as the cluster for :class:`ShardedLexicalSession`,
+which keeps the corpus resident *sharded* and reduces every microbatch
+through the `repro.cluster` merge contract.
 """
 
 from __future__ import annotations
@@ -14,7 +17,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import cluster
 from repro.core import anchors, scan, topk
 from repro.core.scoring import PAD_TOKEN, CollectionStats, Scorer, get_scorer
 
@@ -92,6 +97,102 @@ class LexicalSession:
     def search(self, q_block: np.ndarray) -> topk.TopKState:
         """Scan one padded query block; blocks until results are on host."""
         return jax.block_until_ready(self._handle(jnp.asarray(q_block, jnp.int32)))
+
+
+class ShardedLexicalSession:
+    """Shard-resident lexical session: the corpus lives *sharded* on a mesh.
+
+    The paper's cluster as a service: each device holds one contiguous
+    corpus shard (placed once at construction via ``NamedSharding`` over the
+    scan axes), microbatches of queries are replicated to every shard, each
+    shard runs the same map fold as the single-host session
+    (`cluster.map_shard`, kernel-dispatched), and shard results reduce
+    through the cluster merge contract (`topk.merge_across_lex`) — so a
+    sharded session's rankings are bit-identical to the resident single-host
+    session's, whatever the mesh shape. Drop-in for ``LexicalSession`` under
+    `repro.serve.service.RetrievalService` (same ``kind``/``pad_value``/
+    ``search`` surface, same ``[n_q, k]`` result shape).
+
+    ``use_kernel=None`` resolves from the Pallas backend once, at
+    construction (the mesh program is built here, not per call).
+    """
+
+    kind = "lexical"
+    pad_value = PAD_TOKEN
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        tokens: np.ndarray,
+        lengths: np.ndarray,
+        scorer: Scorer | str,
+        *,
+        k: int,
+        chunk_size: int,
+        stats: CollectionStats | None = None,
+        vocab: int | None = None,
+        use_kernel: bool | None = None,
+        axis_names: tuple[str, ...] | None = None,
+    ):
+        self.scorer = get_scorer(scorer) if isinstance(scorer, str) else scorer
+        if self.scorer.kind != "lexical":
+            raise ValueError(f"scorer {self.scorer.name!r} is not lexical")
+        if use_kernel is None:
+            from repro.kernels import ops
+
+            use_kernel = ops.kernel_backend() == "compiled"
+        self.use_kernel = use_kernel
+        self.k = k
+        self.chunk_size = chunk_size
+        self.mesh = mesh
+        if axis_names is None:
+            axis_names = cluster.mesh_scan_axes(mesh)
+        self.axis_names = axis_names
+        # the plan validates the geometry (equal chunk-aligned shards over
+        # the scan axes) even though placement is by NamedSharding here
+        self.plan = cluster.plan_for_mesh(
+            mesh, int(np.asarray(tokens).shape[0]), chunk_size=chunk_size,
+            axis_names=axis_names,
+        )
+        doc_sharding = NamedSharding(mesh, P(axis_names))
+        repl = NamedSharding(mesh, P())
+        self._tokens = jax.device_put(jnp.asarray(tokens, jnp.int32), doc_sharding)
+        self._lengths = jax.device_put(jnp.asarray(lengths, jnp.int32), doc_sharding)
+        if stats is None:
+            if vocab is None:
+                raise ValueError("need stats or vocab to derive collection statistics")
+            stats = anchors.collection_stats(
+                jnp.asarray(tokens, jnp.int32), jnp.asarray(lengths, jnp.int32),
+                vocab=vocab, chunk_size=chunk_size,
+            )
+        self._stats = jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), repl), stats)
+
+        self._fn = cluster.search_mesh(
+            mesh,
+            jnp.zeros((1, 1), jnp.int32),  # query prototype: specs need structure only
+            (self._tokens, self._lengths),
+            self.scorer,
+            k=k,
+            chunk_size=chunk_size,
+            stats=self._stats,
+            axis_names=axis_names,
+            use_kernel=use_kernel,
+        )
+
+    @property
+    def n_docs(self) -> int:
+        return int(self._tokens.shape[0])
+
+    def search(self, q_block: np.ndarray) -> topk.TopKState:
+        """Scan one padded query block across all shards; blocks until the
+        merged (replicated) top-k is on host."""
+        state = self._fn(
+            jnp.asarray(q_block, jnp.int32), (self._tokens, self._lengths), self._stats
+        )
+        # one scorer -> drop the grid axis: service rows are [n_q, k]
+        return jax.block_until_ready(
+            topk.TopKState(scores=state.scores[0], ids=state.ids[0])
+        )
 
 
 class DenseSession:

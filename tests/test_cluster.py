@@ -1,0 +1,422 @@
+"""The mesh-sharded map/reduce layer: plans, merges, jobs, serve sessions.
+
+The load-bearing contract under test is **shard-count invariance**: however
+the corpus is cut (1/2/4 shards), whichever path folds the shards (host fold
+or Pallas kernel), and whichever shards get killed and resumed, the merged
+top-k state — ids *and* score bytes — equals the single-host oracle scan,
+and the TREC run files written from it are byte-identical.
+"""
+
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.core import anchors, scan, scoring, topk
+from repro.data import synthetic
+from repro.experiments import job as exp_job
+from repro.experiments import runner
+
+VOCAB = 2048
+N_DOCS = 512
+CHUNK = 64
+K = 10
+
+SCORERS = lambda: [  # noqa: E731 — tiny grid shared by most tests
+    scoring.make_variant("ql_lm"),
+    scoring.make_variant("bm25"),
+    scoring.make_variant("ql_lm", lam=0.5),
+]
+
+
+@pytest.fixture(scope="module")
+def collection():
+    corpus = synthetic.make_corpus(n_docs=N_DOCS, vocab=VOCAB, max_len=32, seed=0)
+    stats = anchors.collection_stats(
+        jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths), vocab=VOCAB,
+        chunk_size=CHUNK,
+    )
+    queries = jnp.asarray(synthetic.make_queries(corpus, n_queries=8, seed=1))
+    docs = (jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths))
+    return corpus, stats, queries, docs
+
+
+@pytest.fixture(scope="module")
+def oracle(collection):
+    """Single-host whole-corpus scan — the ground truth every plan must hit."""
+    _, stats, queries, docs = collection
+    return scan.search_local_multi(
+        queries, docs, SCORERS(), k=K, chunk_size=CHUNK, stats=stats
+    )
+
+
+def assert_states_identical(got, want, *, err=""):
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids), err_msg=err)
+    assert np.asarray(got.scores).tobytes() == np.asarray(want.scores).tobytes(), err
+
+
+# -- plan layer --------------------------------------------------------------
+
+
+def test_plan_shards_geometry():
+    plan = cluster.plan_shards(N_DOCS, n_shards=4, chunk_size=CHUNK)
+    assert plan.n_shards == 4
+    assert [s.n_rows for s in plan.shards] == [128] * 4
+    assert [s.doc_id_offset for s in plan.shards] == [0, 128, 256, 384]
+    # shards tile [0, n_docs) exactly
+    assert plan.shards[0].start == 0 and plan.shards[-1].stop == N_DOCS
+    for a, b in zip(plan.shards, plan.shards[1:]):
+        assert a.stop == b.start
+    d = plan.describe()
+    assert d["n_shards"] == 4 and d["shards"][1] == [128, 256]
+
+
+def test_plan_shards_rejects_bad_cuts():
+    with pytest.raises(ValueError, match="n_shards"):
+        cluster.plan_shards(N_DOCS, n_shards=0, chunk_size=CHUNK)
+    with pytest.raises(ValueError, match="equal shards"):
+        cluster.plan_shards(N_DOCS, n_shards=3, chunk_size=CHUNK)
+    with pytest.raises(ValueError, match="chunk_size"):
+        cluster.plan_shards(N_DOCS, n_shards=4, chunk_size=96)
+
+
+def test_plan_for_mesh_scan_axes(mesh11):
+    plan = cluster.plan_for_mesh(mesh11, N_DOCS, chunk_size=CHUNK)
+    assert plan.n_shards == 1  # 1x1 mesh: the degenerate single-host cluster
+    assert plan.axis_names == ("data", "model")
+    assert cluster.mesh_scan_axes(mesh11) == ("data", "model")
+
+
+def test_plan_for_single_axis_mesh():
+    """The degenerate rules_for_mesh fallback maps dp and tp to the same
+    axis on a 1-axis mesh; scan_axes must deduplicate or every shard is
+    double-counted (and PartitionSpecs get an invalid repeated axis)."""
+    from repro.distributed.sharding import AxisRules, rules_for_mesh
+
+    mesh = jax.make_mesh((1,), ("data",))
+    assert rules_for_mesh(mesh).scan_axes == ("data",)
+    assert cluster.mesh_scan_axes(mesh) == ("data",)
+    plan = cluster.plan_for_mesh(mesh, N_DOCS, chunk_size=CHUNK)
+    assert plan.n_shards == 1 and plan.axis_names == ("data",)
+    # multi-device single-axis rules (can't build the mesh on one device,
+    # but the rules algebra is device-independent)
+    assert AxisRules(dp=("x",), tp="x").scan_axes == ("x",)
+
+
+# -- reduce layer ------------------------------------------------------------
+
+
+def test_merge_lex_is_value_deterministic(oracle):
+    """Lexicographic merge ignores shard order/grouping — unlike positional
+    ``lax.top_k`` merges, which is why it's the cluster reduce."""
+    a = topk.TopKState(scores=oracle.scores[:, :, :K], ids=oracle.ids[:, :, :K])
+    empty = topk.init(K, a.scores.shape[:-1])
+    ab = topk.merge_lex(a, empty)
+    ba = topk.merge_lex(empty, a)
+    assert_states_identical(ab, a)
+    assert_states_identical(ba, a)
+
+
+def test_reduce_lex_grouping_invariance(collection, oracle):
+    _, stats, queries, docs = collection
+    plan = cluster.plan_shards(N_DOCS, n_shards=4, chunk_size=CHUNK)
+    states = [
+        cluster.map_shard(
+            queries, s.take(docs), SCORERS(), k=K, chunk_size=CHUNK, stats=stats,
+            doc_id_offset=s.doc_id_offset,
+        )
+        for s in plan.shards
+    ]
+    left = cluster.reduce_states(states)
+    reverse = cluster.reduce_states(states[::-1])
+    paired = topk.merge_lex(
+        topk.merge_lex(states[0], states[1]), topk.merge_lex(states[2], states[3])
+    )
+    for got, label in ((left, "left"), (reverse, "reverse"), (paired, "paired")):
+        assert_states_identical(got, oracle, err=label)
+
+
+def test_reduce_lex_rejects_empty_and_mismatch():
+    with pytest.raises(ValueError, match="at least one"):
+        topk.reduce_lex([])
+    with pytest.raises(ValueError, match="shape mismatch"):
+        topk.merge_lex(topk.init(4, (2,)), topk.init(8, (2,)))
+
+
+# -- map + shard-count invariance -------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_shard_count_invariance(collection, oracle, n_shards, use_kernel):
+    """1/2/4 shards, host fold and Pallas kernel: bit-identical to the
+    single-host oracle (ids and score bytes)."""
+    _, stats, queries, docs = collection
+    plan = cluster.plan_shards(N_DOCS, n_shards=n_shards, chunk_size=CHUNK)
+    state = cluster.scan_shards(
+        plan, queries, docs, SCORERS(), k=K, stats=stats, use_kernel=use_kernel
+    )
+    assert_states_identical(state, oracle, err=f"{n_shards} shards kernel={use_kernel}")
+
+
+def test_shard_invariance_with_tied_scores(collection):
+    """Duplicate docs across a shard boundary force exact score ties; the
+    lexicographic tie-break (smaller id) must match the oracle's fold."""
+    corpus, stats, queries, _ = collection
+    dup = (
+        jnp.asarray(np.concatenate([corpus.tokens[:256]] * 2)),
+        jnp.asarray(np.concatenate([corpus.lengths[:256]] * 2)),
+    )
+    want = scan.search_local_multi(
+        queries, dup, SCORERS(), k=K, chunk_size=CHUNK, stats=stats
+    )
+    for n_shards in (2, 4):
+        plan = cluster.plan_shards(512, n_shards=n_shards, chunk_size=CHUNK)
+        got = cluster.scan_shards(plan, queries, dup, SCORERS(), k=K, stats=stats)
+        assert_states_identical(got, want, err=f"{n_shards} shards")
+        # the ties are real: every duplicated doc pairs with id+256
+        ids = np.asarray(got.ids)
+        assert (ids >= 256).any() and (ids < 256).any()
+
+
+def test_shard_invariance_k_exceeds_shard(collection):
+    """k > rows-per-shard: shards emit (-inf, -1) empty slots; the merge must
+    rank every real doc above every sentinel and keep sentinel purity."""
+    _, stats, queries, docs = collection
+    small = jax.tree.map(lambda x: x[:128], docs)
+    k = 200  # > 128 total rows, so even the merged state keeps empties
+    want = scan.search_local_multi(
+        queries, small, SCORERS(), k=k, chunk_size=32, stats=stats
+    )
+    plan = cluster.plan_shards(128, n_shards=4, chunk_size=32)
+    got = cluster.scan_shards(plan, queries, small, SCORERS(), k=k, stats=stats)
+    assert_states_identical(got, want)
+    mask = np.asarray(topk.valid_mask(got))
+    assert (~mask).any(), "expected empty slots with k > corpus"
+    assert (np.asarray(got.ids)[~mask] == -1).all()
+
+
+def test_map_shard_dense_kernel_stacks_grid_axis():
+    q = jnp.asarray(synthetic.make_dense_corpus(n_docs=16, dim=32, seed=0))
+    d = jnp.asarray(synthetic.make_dense_corpus(n_docs=256, dim=32, seed=1))
+    scorer = scoring.get_scorer("dense_dot")
+    got = cluster.map_shard(q, d, [scorer], k=K, chunk_size=64, use_kernel=True)
+    want = scan.search_local(q, d, scorer, k=K, chunk_size=64, use_kernel=True)
+    assert got.ids.shape == (1, 16, K)
+    np.testing.assert_array_equal(np.asarray(got.ids)[0], np.asarray(want.ids))
+
+
+# -- mesh execution (1-device mesh in-process; multi-device in test_system) --
+
+
+def test_search_mesh_multi_model(collection, oracle, mesh11):
+    _, stats, queries, docs = collection
+    fn = cluster.search_mesh(
+        mesh11, queries, docs, SCORERS(), k=K, chunk_size=CHUNK, stats=stats
+    )
+    with jax.set_mesh(mesh11):
+        state = fn(queries, docs, stats)
+    assert_states_identical(state, oracle)
+
+
+def test_search_sharded_deprecated_alias(mesh11):
+    q = jnp.asarray(synthetic.make_dense_corpus(n_docs=16, dim=32, seed=2))
+    d = jnp.asarray(synthetic.make_dense_corpus(n_docs=256, dim=32, seed=3))
+    with pytest.warns(DeprecationWarning, match="search_mesh"):
+        fn = scan.search_sharded(
+            mesh11, ("data", "model"), q, d, scoring.get_scorer("dense_dot"),
+            k=9, chunk_size=32,
+        )
+    with jax.set_mesh(mesh11):
+        state = fn(q, d, None)
+    ref = scan.search_dense_host(q, d, 9)
+    assert state.ids.shape == (16, 9)  # alias keeps the squeezed legacy shape
+    np.testing.assert_array_equal(np.asarray(state.ids), np.asarray(ref.ids))
+
+
+# -- sharded jobs: per-shard kill/resume, byte-identical artifacts -----------
+
+
+def test_sharded_job_kill_resume_run_files_byte_identical(collection, tmp_path):
+    """Kill one shard mid-job; resume; merged run files must be byte-identical
+    to the uninterrupted single-host job's (the acceptance contract)."""
+    _, stats, queries, docs = collection
+    scorers = SCORERS()
+    kw = dict(k=K, chunk_size=CHUNK, segment_chunks=2, stats=stats)
+
+    single = cluster.run_sharded_scan_job(
+        queries, docs, scorers, ckpt_dir=str(tmp_path / "single"), **kw
+    )
+    assert single.plan.n_shards == 1
+    # one-shard layout is the classic flat single-host one
+    assert os.path.exists(tmp_path / "single" / "progress.json")
+
+    with pytest.raises(RuntimeError, match="injected failure"):
+        cluster.run_sharded_scan_job(
+            queries, docs, scorers, n_shards=4, ckpt_dir=str(tmp_path / "sh"),
+            fail_at_segment=0, fail_at_shard=2, **kw
+        )
+    # shards 0 and 1 finished, 2 committed its first segment then died, 3 never ran
+    for idx, complete in ((0, True), (1, True)):
+        prog = cluster.read_progress(str(tmp_path / "sh" / f"shard_{idx:04d}"))
+        assert prog["shards"][str(idx)]["complete"] is complete
+    prog2 = cluster.read_progress(str(tmp_path / "sh" / "shard_0002"))
+    assert prog2["shards"]["2"]["segments_done"] == 1
+    assert cluster.read_progress(str(tmp_path / "sh" / "shard_0003")) is None
+    assert cluster.read_cluster_manifest(str(tmp_path / "sh"))["plan"]["n_shards"] == 4
+
+    resumed = cluster.run_sharded_scan_job(
+        queries, docs, scorers, n_shards=4, ckpt_dir=str(tmp_path / "sh"), **kw
+    )
+    by_shard = [r.resumed_from for r in resumed.shard_results]
+    assert by_shard[2] == 1 and by_shard[3] == 0  # killed shard resumed mid-way
+    assert_states_identical(resumed.state, single.state)
+
+    pa = runner.write_run_files(str(tmp_path / "ra"), scorers, single.state, tag_prefix="t")
+    pb = runner.write_run_files(str(tmp_path / "rb"), scorers, resumed.state, tag_prefix="t")
+    for name in pa:
+        assert open(pa[name], "rb").read() == open(pb[name], "rb").read(), name
+
+    # idempotent re-run: every shard restores, nothing re-folds
+    again = cluster.run_sharded_scan_job(
+        queries, docs, scorers, n_shards=4, ckpt_dir=str(tmp_path / "sh"), **kw
+    )
+    assert again.segments_run == 0
+    assert_states_identical(again.state, single.state)
+
+
+def test_sharded_job_rejects_replanned_dir(collection, tmp_path):
+    _, stats, queries, docs = collection
+    kw = dict(k=K, chunk_size=CHUNK, segment_chunks=2, stats=stats)
+    cluster.run_sharded_scan_job(
+        queries, docs, SCORERS(), n_shards=4, ckpt_dir=str(tmp_path / "c"), **kw
+    )
+    with pytest.raises(ValueError, match="different shard plan"):
+        cluster.run_sharded_scan_job(
+            queries, docs, SCORERS(), n_shards=2, ckpt_dir=str(tmp_path / "c"), **kw
+        )
+    # resume=False re-plans cleanly
+    fresh = cluster.run_sharded_scan_job(
+        queries, docs, SCORERS(), n_shards=2, ckpt_dir=str(tmp_path / "c"),
+        resume=False, **kw
+    )
+    assert fresh.plan.n_shards == 2 and fresh.segments_run == fresh.segments_total
+
+
+def test_sharded_job_kernel_path_kill_resume(collection, tmp_path):
+    """Kernel-on sharded job — including a per-shard kill and resume through
+    the kernel's init_state merge — == host-fold sharded job, id-exact."""
+    _, stats, queries, docs = collection
+    kw = dict(k=K, chunk_size=CHUNK, segment_chunks=2, stats=stats, n_shards=2)
+    host = cluster.run_sharded_scan_job(queries, docs, SCORERS(), **kw)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        cluster.run_sharded_scan_job(
+            queries, docs, SCORERS(), ckpt_dir=str(tmp_path / "k"),
+            use_kernel=True, fail_at_segment=0, fail_at_shard=1, **kw
+        )
+    kern = cluster.run_sharded_scan_job(
+        queries, docs, SCORERS(), ckpt_dir=str(tmp_path / "k"), use_kernel=True, **kw
+    )
+    # the killed shard resumed from its committed segment, through the
+    # kernel branch's init_state fold — not a silent from-scratch re-run
+    assert kern.shard_results[1].resumed_from == 1
+    assert kern.shard_results[1].segments_run == 1
+    np.testing.assert_array_equal(np.asarray(kern.state.ids), np.asarray(host.state.ids))
+
+
+def test_run_scan_job_is_one_shard_special_case(collection):
+    """`experiments.job.run_scan_job` is literally the cluster shard engine."""
+    assert exp_job.run_scan_job is cluster.run_scan_job
+    _, stats, queries, docs = collection
+    kw = dict(k=K, chunk_size=CHUNK, segment_chunks=2, stats=stats)
+    a = exp_job.run_scan_job(queries, docs, SCORERS(), **kw)
+    b = cluster.run_sharded_scan_job(queries, docs, SCORERS(), n_shards=1, **kw)
+    assert_states_identical(b.state, a.state)
+
+
+# -- serve: shard-resident sessions ------------------------------------------
+
+
+def test_sharded_session_matches_resident_session(collection, mesh11):
+    from repro.serve.session import LexicalSession, ShardedLexicalSession
+
+    corpus, stats, queries, _ = collection
+    base = LexicalSession(
+        corpus.tokens, corpus.lengths, "ql_lm", k=K, chunk_size=CHUNK, stats=stats
+    )
+    sharded = ShardedLexicalSession(
+        mesh11, corpus.tokens, corpus.lengths, "ql_lm", k=K, chunk_size=CHUNK,
+        stats=stats,
+    )
+    assert sharded.n_docs == base.n_docs
+    q = np.asarray(queries)
+    a, b = base.search(q), sharded.search(q)
+    assert b.ids.shape == (q.shape[0], K)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+def test_sharded_session_serves_through_dispatcher(collection, mesh11):
+    from repro.serve import RetrievalService
+    from repro.serve.session import ShardedLexicalSession
+
+    corpus, stats, queries, docs = collection
+    session = ShardedLexicalSession(
+        mesh11, corpus.tokens, corpus.lengths, "bm25", k=K, chunk_size=CHUNK,
+        stats=stats,
+    )
+    svc = RetrievalService({"lexical": session}, max_batch=4, max_delay=0.0)
+    q = np.asarray(queries)
+    rids = [svc.submit(q[i]) for i in range(4)]
+    results = svc.poll() or svc.drain()
+    want = scan.search_local_multi(
+        queries, docs, [scoring.get_scorer("bm25")], k=K, chunk_size=CHUNK,
+        stats=stats,
+    )
+    for row, rid in enumerate(rids):
+        np.testing.assert_array_equal(results[rid].ids, np.asarray(want.ids)[0, row])
+
+
+def test_sharded_session_validates(collection, mesh11):
+    from repro.serve.session import ShardedLexicalSession
+
+    corpus, _, _, _ = collection
+    with pytest.raises(ValueError, match="not lexical"):
+        ShardedLexicalSession(
+            mesh11, corpus.tokens, corpus.lengths, "dense_dot", k=K, chunk_size=CHUNK,
+            vocab=VOCAB,
+        )
+    with pytest.raises(ValueError, match="need stats or vocab"):
+        ShardedLexicalSession(
+            mesh11, corpus.tokens, corpus.lengths, "ql_lm", k=K, chunk_size=CHUNK
+        )
+
+
+# -- experiment lifecycle at shard counts ------------------------------------
+
+
+def test_experiment_sharded_run_files_byte_identical(tmp_path):
+    import dataclasses
+
+    from repro.experiments import grid as exp_grid
+
+    spec = dataclasses.replace(
+        exp_grid.get_experiment("smoke"), segment_chunks=1, n_queries=8
+    )
+    coll = runner.prepare_collection(spec)
+    r1 = runner.run_experiment(spec, out_dir=str(tmp_path / "s1"), collection=coll)
+    r4 = runner.run_experiment(
+        dataclasses.replace(spec, n_shards=4),
+        out_dir=str(tmp_path / "s4"), collection=coll,
+    )
+    assert r4["job"]["n_shards"] == 4
+    assert len(r4["job"]["shards"]) == 4
+    for name in r1["runs"]:
+        assert (
+            open(r1["runs"][name], "rb").read() == open(r4["runs"][name], "rb").read()
+        ), name
+    assert r1["metrics"] == r4["metrics"]

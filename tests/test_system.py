@@ -75,18 +75,32 @@ mesh = jax.make_mesh((4, 2), ("data", "model"))
 rules = rules_for_mesh(mesh)
 results = {}
 
-# 1) sharded MIREX scan == unsharded oracle
+# 1) mesh-sharded MIREX scan (repro.cluster, 8 real shards) == unsharded oracle
+from repro import cluster
 corpus = synthetic.make_dense_corpus(n_docs=512, dim=32, seed=1)
 queries = synthetic.make_dense_corpus(n_docs=16, dim=32, seed=2)
-fn = scan.search_sharded(
-    mesh, ("data", "model"), jnp.asarray(queries), jnp.asarray(corpus),
+fn = cluster.search_mesh(
+    mesh, jnp.asarray(queries), jnp.asarray(corpus),
     scoring.get_scorer("dense_dot"), k=9, chunk_size=32,
 )
 with jax.set_mesh(mesh):
     state = fn(jnp.asarray(queries), jnp.asarray(corpus), None)
 ref = scan.search_dense_host(jnp.asarray(queries), jnp.asarray(corpus), 9)
-np.testing.assert_allclose(np.asarray(state.scores), np.asarray(ref.scores), rtol=1e-5)
-results["scan_ids_equal"] = bool((np.asarray(state.ids) == np.asarray(ref.ids)).all())
+np.testing.assert_allclose(np.asarray(state.scores[0]), np.asarray(ref.scores), rtol=1e-5)
+results["scan_ids_equal"] = bool((np.asarray(state.ids[0]) == np.asarray(ref.ids)).all())
+
+# 1b) multi-model lexical grid on the mesh == single-host multi-scan, id-exact
+from repro.core import anchors
+lex = synthetic.make_corpus(n_docs=512, vocab=1024, max_len=32, seed=5)
+lex_docs = (jnp.asarray(lex.tokens), jnp.asarray(lex.lengths))
+lex_stats = anchors.collection_stats(*lex_docs, vocab=1024, chunk_size=64)
+lex_q = jnp.asarray(synthetic.make_queries(lex, n_queries=8, seed=6))
+grid = [scoring.make_variant("ql_lm"), scoring.make_variant("bm25")]
+gfn = cluster.search_mesh(mesh, lex_q, lex_docs, grid, k=10, chunk_size=64, stats=lex_stats)
+with jax.set_mesh(mesh):
+    gstate = gfn(lex_q, lex_docs, lex_stats)
+want = scan.search_local_multi(lex_q, lex_docs, grid, k=10, chunk_size=64, stats=lex_stats)
+results["mesh_grid_ids_equal"] = bool((np.asarray(gstate.ids) == np.asarray(want.ids)).all())
 
 # 2) LM train loss: 8-way sharded == single-device
 batch = synthetic.make_lm_batch(batch=8, seq_len=16, vocab=512, seed=3)
@@ -133,4 +147,5 @@ def test_multidevice_equivalences_subprocess():
     assert proc.returncode == 0, proc.stderr[-3000:]
     out = json.loads(proc.stdout.strip().splitlines()[-1])
     assert out["scan_ids_equal"]
+    assert out["mesh_grid_ids_equal"]
     assert out["gnn_sharded_ok"]
