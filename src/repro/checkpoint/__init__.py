@@ -1,3 +1,17 @@
-from repro.checkpoint.checkpoint import all_steps, latest_step, prune, restore, save
+from repro.checkpoint.checkpoint import (
+    AsyncCheckpointer,
+    all_steps,
+    latest_step,
+    prune,
+    restore,
+    save,
+)
 
-__all__ = ["save", "restore", "latest_step", "all_steps", "prune"]
+__all__ = [
+    "AsyncCheckpointer",
+    "save",
+    "restore",
+    "latest_step",
+    "all_steps",
+    "prune",
+]

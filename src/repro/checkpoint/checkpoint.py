@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import json
 import os
+import queue as queue_mod
 import shutil
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +93,101 @@ def prune(ckpt_dir: str, keep: int) -> list[int]:
     for s in drop:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))
     return drop
+
+
+class AsyncCheckpointer:
+    """Ordered background committer: checkpoint I/O off the critical path.
+
+    A pipelined scan job hands each post-segment commit sequence —
+    ``save(step)`` → progress manifest → ``prune`` — to one writer thread
+    and keeps folding the next segment; the device arrays it enqueues are
+    immutable, so the writer's later ``device_get`` reads exactly the
+    committed value. The contract that makes this safe to swap for inline
+    commits:
+
+    * **same order** — tasks run strictly in submission order on a single
+      thread, so the on-disk write sequence is identical to the synchronous
+      path's; a hard kill at any instant leaves a disk state the
+      synchronous path could also have left (atomicity of each ``save`` is
+      unchanged — the rename-commit happens on the writer thread).
+    * **fail-stop** — the first task error poisons the queue: later tasks
+      are skipped (a progress manifest must never claim a commit whose
+      ``save`` failed) and the error re-raises on the next
+      :meth:`drain`/:meth:`submit`/:meth:`close`.
+    * **drain barrier** — :meth:`drain` blocks until everything submitted
+      so far is durably on disk; jobs drain before reporting a step done
+      (e.g. ahead of an injected lost-ack kill) and before returning, so
+      resume semantics match the synchronous path exactly.
+    """
+
+    def __init__(self):
+        self._queue: queue_mod.Queue = queue_mod.Queue()
+        self._error: BaseException | None = None
+        self._thread = threading.Thread(
+            target=self._run, name="ckpt-writer", daemon=True
+        )
+        self._closed = False
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._queue.get()
+            try:
+                if item is None:
+                    return
+                if self._error is None:  # poison: skip everything after a failure
+                    fn, args, kwargs = item
+                    fn(*args, **kwargs)
+            except BaseException as e:  # noqa: BLE001 — re-raised on drain
+                self._error = e
+            finally:
+                self._queue.task_done()
+
+    def _check(self):
+        # the error stays set: a failed commit poisons the writer for good,
+        # so no later task (e.g. a progress manifest claiming the failed
+        # step) can ever run, even after the error has been reported once
+        if self._error is not None:
+            raise self._error
+
+    def submit(self, fn, *args, **kwargs) -> None:
+        """Enqueue ``fn(*args, **kwargs)`` after everything already queued."""
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointer is closed")
+        self._check()
+        self._queue.put((fn, args, kwargs))
+
+    def drain(self) -> None:
+        """Block until all submitted work is on disk; re-raise writer errors."""
+        self._queue.join()
+        self._check()
+
+    def _shutdown(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.join()
+        self._queue.put(None)
+        self._thread.join()
+
+    def close(self) -> None:
+        """Drain, stop the writer thread, and re-raise any pending error."""
+        was_closed = self._closed
+        self._shutdown()
+        if not was_closed:
+            self._check()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        # don't mask an in-flight exception (e.g. an injected kill) with a
+        # writer error; the writer error still surfaces for clean exits
+        if exc_type is not None:
+            self._shutdown()
+            return False
+        self.close()
+        return False
 
 
 def restore(ckpt_dir: str, step: int, tree_like, *, shardings=None):

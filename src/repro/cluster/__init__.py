@@ -22,7 +22,14 @@ from repro.cluster.plan import (
     plan_for_mesh,
     plan_shards,
 )
-from repro.cluster.mapreduce import map_shard, reduce_states, scan_shards, search_mesh
+from repro.cluster.mapreduce import (
+    FOLD_TRACE_COUNTS,
+    map_shard,
+    reduce_states,
+    scan_shards,
+    search_mesh,
+    segment_fold,
+)
 from repro.cluster.job import (
     ScanJobResult,
     ShardedScanResult,
@@ -34,6 +41,7 @@ from repro.cluster.job import (
 )
 
 __all__ = [
+    "FOLD_TRACE_COUNTS",
     "Shard",
     "ShardPlan",
     "ScanJobResult",
@@ -49,5 +57,6 @@ __all__ = [
     "run_sharded_scan_job",
     "scan_shards",
     "search_mesh",
+    "segment_fold",
     "shard_ckpt_dir",
 ]

@@ -20,6 +20,27 @@ re-reduced without changing the answer) holds here at two nested levels:
 Failure injection mirrors `launch/train.py`: ``fail_at_segment=s`` raises
 after segment ``s``'s checkpoint commits on shard ``fail_at_shard`` — the
 canonical lost-ack kill point.
+
+**The pipelined executor** (``pipeline=True``, the default) overlaps
+everything the sequential path serializes, without changing a byte of any
+artifact:
+
+* one compiled fold — `cluster.mapreduce.segment_fold` is jit-cached per
+  (grid, k, chunk, kernel) configuration, so all shards and segments of a
+  job (and every later job with the same config) share one program instead
+  of re-tracing per ``run_scan_job`` call;
+* double-buffered segments — `pipeline.prefetch_segments` stages segment
+  *s+1*'s host→device transfer while segment *s* folds, and stops eagerly
+  staging a shard's whole doc slice on its device up front;
+* async checkpoints — the ``save → progress → prune`` commit sequence runs
+  on a `checkpoint.AsyncCheckpointer` writer thread in submission order,
+  with a drain barrier before any reported kill/completion, so kill/resume
+  disk states are exactly the synchronous path's;
+* concurrent shards — ``run_sharded_scan_job`` runs shards on a
+  device-aware thread pool (one worker per assigned device, round-robin
+  placement preserved), then reduces through the same value-deterministic
+  merge, so merged states stay byte-identical to the sequential executor
+  and the single-host oracle.
 """
 
 from __future__ import annotations
@@ -29,17 +50,17 @@ import hashlib
 import json
 import os
 import shutil
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.core import pipeline, topk
 from repro.core.scoring import CollectionStats, Scorer
 
-from repro.cluster.mapreduce import map_shard, reduce_states
+from repro.cluster.mapreduce import reduce_states, segment_fold
 from repro.cluster.plan import ShardPlan, plan_shards
 
 
@@ -146,6 +167,8 @@ def run_scan_job(
     doc_id_offset: int = 0,
     use_kernel: bool = False,
     device: jax.Device | None = None,
+    pipelined: bool = True,
+    prefetch_depth: int = 2,
 ) -> ScanJobResult:
     """Run (or resume) one shard's checkpointed multi-scorer scan — the map
     task of the sharded job, and the whole job when the plan has one shard.
@@ -155,19 +178,38 @@ def run_scan_job(
     the resume point; ``keep_checkpoints`` bounds disk via ``ckpt.prune``.
     ``device`` pins the shard's fold (and its restored state) to one device —
     how :func:`run_sharded_scan_job` spreads shards over a mesh's devices.
+
+    ``pipelined=True`` (default) runs the overlapped executor: segments
+    stream to the device ``prefetch_depth`` ahead of the fold
+    (`pipeline.prefetch_segments`) and checkpoint commits run on an async
+    writer with a drain barrier (`checkpoint.AsyncCheckpointer`);
+    ``pipelined=False`` is the fully synchronous reference executor.
+    Both fold through the shared compiled program (`segment_fold`) and
+    produce byte-identical states, checkpoints, and resume points.
     """
     scorers = tuple(scorers)
-    if device is not None:
-        queries = jax.device_put(queries, device)
-        docs = jax.device_put(docs, device)
     n_rows = jax.tree.leaves(docs)[0].shape[0]
     n_q = jax.tree.leaves(queries)[0].shape[0]
     segs = pipeline.segments(n_rows, chunk_size, segment_chunks)
 
-    fingerprint = _job_fingerprint(
-        queries, docs, scorers, k, chunk_size, segment_chunks, doc_id_offset, stats
-    )
-    state = topk.init(k, (len(scorers), n_q))
+    # host-built init state (no device dispatch): concurrent shard workers
+    # would serialize on eager op dispatches, and the batched device_put
+    # below ships it with the queries/stats in one transfer
+    state = topk.init_host(k, (len(scorers), n_q))
+    if device is not None:
+        # one batched transfer (a device_put per leaf costs a dispatch each,
+        # which concurrent shards would serialize on)
+        queries, stats, state = jax.device_put((queries, stats, state), device)
+        if not pipelined:
+            # legacy eager staging: the whole shard slice moves up front;
+            # the pipelined path streams per-segment instead
+            docs = jax.device_put(docs, device)
+
+    fingerprint = None
+    if ckpt_dir:
+        fingerprint = _job_fingerprint(
+            queries, docs, scorers, k, chunk_size, segment_chunks, doc_id_offset, stats
+        )
     start_seg = 0
     if ckpt_dir and resume:
         latest = ckpt.latest_step(ckpt_dir)
@@ -185,6 +227,8 @@ def run_scan_job(
                     f"checkpoint at segment {latest} but job has {len(segs)} segments"
                 )
             state = ckpt.restore(ckpt_dir, latest, state)
+            if device is not None:
+                state = jax.device_put(state, device)
             start_seg = latest
     elif ckpt_dir:
         # fresh start over a dirty dir: drop stale commits so they can never
@@ -194,22 +238,9 @@ def run_scan_job(
         stale = os.path.join(ckpt_dir, "progress.json")
         if os.path.exists(stale):
             os.remove(stale)
-    if device is not None:
-        state = jax.device_put(state, device)
 
-    @jax.jit
-    def fold_segment(state, seg_docs, offset):
-        return map_shard(
-            queries,
-            seg_docs,
-            scorers,
-            k=k,
-            chunk_size=chunk_size,
-            stats=stats,
-            doc_id_offset=offset,
-            init_state=state,
-            use_kernel=use_kernel,
-        )
+    # the one compiled program every shard/segment/job of this config shares
+    fold = segment_fold(scorers, k=k, chunk_size=chunk_size, use_kernel=use_kernel)
 
     def progress(done: int) -> dict:
         return {
@@ -232,19 +263,52 @@ def run_scan_job(
         }
 
     ran = 0
-    for seg_idx in range(start_seg, len(segs)):
-        a, b = segs[seg_idx]
-        seg_docs = jax.tree.map(lambda x: x[a:b], docs)
-        state = fold_segment(state, seg_docs, jnp.int32(doc_id_offset + a))
-        ran += 1
-        if ckpt_dir:
-            state = jax.block_until_ready(state)
-            ckpt.save(ckpt_dir, seg_idx + 1, state)
-            _write_progress(ckpt_dir, progress(seg_idx + 1))
-            ckpt.prune(ckpt_dir, keep_checkpoints)
-        if fail_at_segment is not None and seg_idx >= fail_at_segment:
-            # die *after* the commit: the canonical lost-ack kill point
-            raise RuntimeError(f"injected failure after segment {seg_idx}")
+    if pipelined:
+        seg_stream = pipeline.prefetch_segments(
+            docs, segs[start_seg:], device=device, depth=prefetch_depth
+        )
+    else:
+        seg_stream = (
+            jax.tree.map(lambda x: x[a:b], docs) for a, b in segs[start_seg:]
+        )
+    writer = ckpt.AsyncCheckpointer() if (pipelined and ckpt_dir) else None
+    try:
+        for seg_idx, seg_docs in zip(range(start_seg, len(segs)), seg_stream):
+            a, _ = segs[seg_idx]
+            state = fold(state, queries, seg_docs, stats, np.int32(doc_id_offset + a))
+            ran += 1
+            if ckpt_dir:
+                if writer is not None:
+                    # commit off the critical path; submission order keeps
+                    # the on-disk sequence identical to the sync path's
+                    writer.submit(ckpt.save, ckpt_dir, seg_idx + 1, state)
+                    writer.submit(_write_progress, ckpt_dir, progress(seg_idx + 1))
+                    writer.submit(ckpt.prune, ckpt_dir, keep_checkpoints)
+                else:
+                    state = jax.block_until_ready(state)
+                    ckpt.save(ckpt_dir, seg_idx + 1, state)
+                    _write_progress(ckpt_dir, progress(seg_idx + 1))
+                    ckpt.prune(ckpt_dir, keep_checkpoints)
+            if fail_at_segment is not None and seg_idx >= fail_at_segment:
+                # die *after* the commit: the canonical lost-ack kill point
+                if writer is not None:
+                    writer.drain()
+                raise RuntimeError(f"injected failure after segment {seg_idx}")
+        if writer is not None:
+            writer.drain()  # barrier: every commit durable before we report done
+    except BaseException:
+        if writer is not None:
+            try:
+                writer.close()
+            except BaseException:
+                pass  # the in-flight error (e.g. the injected kill) wins
+            writer = None
+        raise
+    finally:
+        if pipelined:
+            seg_stream.close()  # stop the prefetch thread on any exit path
+        if writer is not None:
+            writer.close()
     if ckpt_dir and start_seg == len(segs):
         _write_progress(ckpt_dir, progress(len(segs)))  # idempotent re-run
     return ScanJobResult(
@@ -292,6 +356,8 @@ def run_sharded_scan_job(
     fail_at_shard: int = 0,
     use_kernel: bool = False,
     devices: Sequence[jax.Device] | None = None,
+    pipelined: bool = True,
+    max_workers: int | None = None,
 ) -> ShardedScanResult:
     """Run (or resume) a full sharded scan job: map every shard, reduce once.
 
@@ -303,10 +369,21 @@ def run_sharded_scan_job(
     ``devices`` spreads shards round-robin (``jax.devices()`` for the
     virtual-device smoke grid; real meshes at multi-process scale).
 
-    The final merged state is byte-identical for every shard count — chunk
-    alignment keeps per-chunk score bytes equal and the lexicographic reduce
-    is value-deterministic — so run files written from it satisfy the same
-    fingerprint contract as the single-host job.
+    ``pipelined=True`` (default) is the overlapped executor: shards run
+    concurrently on a thread pool sized one worker per assigned device
+    (override with ``max_workers``) — so a 4-device host actually scans 4
+    shards at once — and each shard's job streams segments and commits
+    checkpoints asynchronously (see :func:`run_scan_job`). With no
+    ``devices`` (or ``max_workers=1``) shards run in plan order on one
+    worker, which preserves the sequential executor's exact failure
+    ordering (shards after a killed shard never start).
+
+    The final merged state is byte-identical for every shard count *and*
+    both executors — chunk alignment keeps per-chunk score bytes equal, the
+    shared fold is one compiled program, and the lexicographic reduce is
+    value-deterministic and applied in plan order whatever order shards
+    finish — so run files written from it satisfy the same fingerprint
+    contract as the single-host job.
     """
     n_rows = jax.tree.leaves(docs)[0].shape[0]
     if plan is None:
@@ -333,35 +410,74 @@ def run_sharded_scan_job(
             {"plan": plan.describe(), "scorers": [s.name for s in scorers], "k": k},
         )
 
-    results: list[ScanJobResult] = []
-    for shard in plan.shards:
+    # stage the replicated inputs once per assigned device, outside the
+    # worker pool: shards on the same device share the transfer, and the
+    # in-job device_put then short-circuits instead of re-copying while
+    # other workers hold the dispatch path
+    staged: dict = {}
+    if devices:
+        for shard in plan.shards:
+            dev = devices[shard.index % len(devices)]
+            if dev not in staged:
+                staged[dev] = jax.device_put((queries, stats), dev)
+
+    def run_one(shard) -> ScanJobResult:
         device = None
+        q, st = queries, stats
         if devices:
             device = devices[shard.index % len(devices)]
-        results.append(
-            run_scan_job(
-                queries,
-                shard.take(docs),
-                scorers,
-                k=k,
-                chunk_size=chunk_size,
-                segment_chunks=segment_chunks,
-                stats=stats,
-                ckpt_dir=shard_ckpt_dir(ckpt_dir, plan, shard.index) if ckpt_dir else None,
-                resume=resume,
-                keep_checkpoints=keep_checkpoints,
-                fail_at_segment=fail_at_segment if shard.index == fail_at_shard else None,
-                shard=shard.index,
-                n_shards=plan.n_shards,
-                doc_id_offset=shard.doc_id_offset,
-                use_kernel=use_kernel,
-                device=device,
-            )
+            q, st = staged[device]
+        return run_scan_job(
+            q,
+            shard.take(docs),
+            scorers,
+            k=k,
+            chunk_size=chunk_size,
+            segment_chunks=segment_chunks,
+            stats=st,
+            ckpt_dir=shard_ckpt_dir(ckpt_dir, plan, shard.index) if ckpt_dir else None,
+            resume=resume,
+            keep_checkpoints=keep_checkpoints,
+            fail_at_segment=fail_at_segment if shard.index == fail_at_shard else None,
+            shard=shard.index,
+            n_shards=plan.n_shards,
+            doc_id_offset=shard.doc_id_offset,
+            use_kernel=use_kernel,
+            device=device,
+            pipelined=pipelined,
         )
+
+    workers = 1
+    if pipelined:
+        workers = max_workers if max_workers else (len(devices) if devices else 1)
+        workers = max(1, min(workers, plan.n_shards))
+
+    if workers == 1:
+        # one worker = the sequential executor's shard ordering (a killed
+        # shard stops the job before later shards ever start)
+        results: list[ScanJobResult] = [run_one(s) for s in plan.shards]
+    else:
+        # device-aware concurrent executor: results (and any failure) are
+        # reported in plan order however shards interleave, so the reduce
+        # below and the raised error are deterministic
+        with ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="scan-shard"
+        ) as ex:
+            futures = [ex.submit(run_one, s) for s in plan.shards]
+        results = []
+        errors: dict[int, BaseException] = {}
+        for i, fut in enumerate(futures):
+            try:
+                results.append(fut.result())
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                errors[i] = e
+        if errors:
+            raise errors[min(errors)]
 
     states = [r.state for r in results]
     if devices:
         # reduce on one device: shard states live where their folds ran
-        states = [jax.device_put(s, devices[0]) for s in states]
+        # (one batched transfer — k-bounded payloads, the paper's shuffle)
+        states = jax.device_put(states, devices[0])
     merged = reduce_states(states)
     return ShardedScanResult(state=merged, plan=plan, shard_results=tuple(results))

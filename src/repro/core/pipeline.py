@@ -19,7 +19,9 @@ failure re-execution, straggler work stealing) merges to the same result.
 
 from __future__ import annotations
 
-from typing import Any, Callable, TypeVar
+import queue as queue_mod
+import threading
+from typing import Any, Callable, Iterator, Sequence, TypeVar
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +70,85 @@ def pad_leading(tree: Pytree, n_target: int, pad_values: Pytree | None = None) -
     if pad_values is None:
         return jax.tree.map(lambda x: _pad(x, 0), tree)
     return jax.tree.map(_pad, tree, pad_values)
+
+
+def prefetch_segments(
+    data: Pytree,
+    segments: Sequence[tuple[int, int]],
+    *,
+    device=None,
+    depth: int = 2,
+) -> Iterator[Pytree]:
+    """Double-buffered host→device segment streaming for pipelined folds.
+
+    Yields ``data[a:b]`` for each ``(a, b)`` in ``segments``, slicing and
+    ``device_put``-ing on a background thread so that while segment *s*
+    folds on the device, segment *s+1*'s transfer is already in flight —
+    transfer hides under compute instead of serializing with it. ``depth``
+    bounds the number of staged segments (2 = classic double buffering), so
+    device memory holds at most ``depth`` segments of corpus at a time
+    instead of a shard's whole slice.
+
+    ``device=None`` skips the placement (slices stay wherever ``data``
+    lives) but keeps the background slicing overlap. The iterator may be
+    abandoned early (e.g. a failure-injection kill): closing it stops the
+    worker thread and drops staged segments.
+    """
+    if depth < 1:
+        raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+    segments = list(segments)
+    if len(segments) <= 1:
+        # nothing to overlap with — skip the worker thread (a fully-resumed
+        # job streams zero segments; a one-segment shard streams inline)
+        for a, b in segments:
+            seg = jax.tree.map(lambda x: x[a:b], data)
+            yield seg if device is None else jax.device_put(seg, device)
+        return
+    q: queue_mod.Queue = queue_mod.Queue(maxsize=depth)
+    stop = threading.Event()
+    _DONE = object()
+
+    def _put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue_mod.Full:
+                continue
+        return False
+
+    def _worker():
+        try:
+            for a, b in segments:
+                if stop.is_set():
+                    return
+                seg = jax.tree.map(lambda x: x[a:b], data)
+                if device is not None:
+                    seg = jax.device_put(seg, device)
+                if not _put(seg):
+                    return
+            _put(_DONE)
+        except BaseException as e:  # noqa: BLE001 — surfaced to the consumer
+            _put(e)
+
+    worker = threading.Thread(target=_worker, name="segment-prefetch", daemon=True)
+    worker.start()
+    try:
+        while True:
+            item = q.get()
+            if item is _DONE:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        stop.set()
+        while not q.empty():  # unblock a producer stuck on a full queue
+            try:
+                q.get_nowait()
+            except queue_mod.Empty:
+                break
+        worker.join(timeout=5.0)
 
 
 def fold_chunks(

@@ -84,10 +84,12 @@ def search_local(
     n_q = jax.tree.leaves(queries)[0].shape[0]
     state0 = topk.init(k, (n_q,))
     offset = jnp.asarray(doc_id_offset, jnp.int32)
+    # hoisted out of the scan body: one id vector per fold, not one per chunk
+    chunk_ids = jnp.arange(chunk_size, dtype=jnp.int32)
 
     def fold(state, chunk, start):
         scores = scorer.score_block(queries, chunk, stats)  # [n_q, chunk_size]
-        ids = offset + start + jnp.arange(scores.shape[-1], dtype=jnp.int32)
+        ids = offset + start + chunk_ids
         return topk.update(state, scores, jnp.broadcast_to(ids, scores.shape))
 
     return pipeline.fold_chunks(docs, chunk_size, fold, state0)
@@ -163,6 +165,8 @@ def search_local_multi(
         return state
 
     offset = jnp.asarray(doc_id_offset, jnp.int32)
+    # hoisted out of the scan body: one id vector per fold, not one per chunk
+    chunk_ids = jnp.arange(chunk_size, dtype=jnp.int32)
 
     def fold(state, chunk, start):
         tf = None
@@ -172,7 +176,7 @@ def search_local_multi(
         scores = jnp.stack(
             [s.score_block(queries, chunk, stats, tf=tf) for s in scorers]
         )  # [n_models, n_q, chunk_size]
-        ids = offset + start + jnp.arange(scores.shape[-1], dtype=jnp.int32)
+        ids = offset + start + chunk_ids
         return topk.update(state, scores, jnp.broadcast_to(ids, scores.shape))
 
     return pipeline.fold_chunks(docs, chunk_size, fold, state0)

@@ -44,6 +44,19 @@ def init(k: int, batch_shape: tuple = (), dtype=jnp.float32) -> TopKState:
     )
 
 
+def init_host(k: int, batch_shape: tuple = ()) -> TopKState:
+    """:func:`init` as host (numpy) arrays — same sentinel contract, zero
+    device dispatches. Concurrent shard executors build their fresh states
+    with this and ship them in one batched ``device_put``, instead of
+    serializing eager ``full`` ops through the dispatch path."""
+    import numpy as np
+
+    return TopKState(
+        scores=np.full((*batch_shape, k), NEG_INF, np.float32),
+        ids=np.full((*batch_shape, k), -1, np.int32),
+    )
+
+
 def valid_mask(state: TopKState) -> jax.Array:
     """Boolean mask of occupied slots (corpus smaller than k leaves empties).
 

@@ -89,6 +89,8 @@ def run_experiment(
     fail_at_segment: int | None = None,
     fail_at_shard: int = 0,
     collection: Collection | None = None,
+    pipelined: bool = True,
+    max_workers: int | None = None,
 ) -> dict:
     """Execute the full lifecycle; returns (and writes) the report dict.
 
@@ -96,7 +98,11 @@ def run_experiment(
     ``ckpt/`` (segment checkpoints + progress manifests; per-shard subdirs
     when ``spec.n_shards > 1``), ``report.json``. Run files are byte-
     identical at every shard count (the `repro.cluster` merge contract), so
-    shard count is an execution knob, not part of the experiment identity.
+    shard count is an execution knob, not part of the experiment identity —
+    as are ``pipelined`` (the overlapped executor: concurrent shards,
+    segment prefetch, async checkpoints; byte-identical artifacts either
+    way) and ``max_workers`` (caps the shard thread pool; default one
+    worker per visible device).
     """
     # clamp eval cutoffs to the run depth up front — failing in evaluation
     # after the whole scan job ran would discard all the work
@@ -131,6 +137,8 @@ def run_experiment(
         fail_at_shard=fail_at_shard,
         use_kernel=spec.use_kernel,
         devices=devices,
+        pipelined=pipelined,
+        max_workers=max_workers,
     )
 
     run_paths = write_run_files(
@@ -167,6 +175,7 @@ def run_experiment(
         "models": [s.name for s in scorers],
         "job": {
             "n_shards": job.plan.n_shards,
+            "pipelined": pipelined,
             "segments_total": job.segments_total,
             "segments_run": job.segments_run,
             "resumed_from": max(r.resumed_from for r in job.shard_results),

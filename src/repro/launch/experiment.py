@@ -105,6 +105,15 @@ def main():
                          "files are byte-identical at every shard count)")
     ap.add_argument("--fail-at-shard", type=int, default=0,
                     help="shard the injected failure fires on (testing)")
+    ap.add_argument("--pipeline", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="overlapped scan executor: concurrent shards, "
+                         "double-buffered segment prefetch, async checkpoints "
+                         "(--no-pipeline = synchronous reference executor; "
+                         "artifacts are byte-identical either way)")
+    ap.add_argument("--max-workers", type=int, default=None,
+                    help="cap the concurrent-shard thread pool (default: one "
+                         "worker per visible device)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="scan through the fused Pallas lexical kernel")
     ap.add_argument("--no-resume", action="store_true",
@@ -128,6 +137,8 @@ def main():
         fail_at_segment=args.fail_at_segment,
         fail_at_shard=args.fail_at_shard,
         collection=coll,
+        pipelined=args.pipeline,
+        max_workers=args.max_workers,
     )
     print_report(report)
     print(f"wrote {out_dir}/report.json")

@@ -113,6 +113,13 @@ class ShardedLexicalSession:
     `repro.serve.service.RetrievalService` (same ``kind``/``pad_value``/
     ``search`` surface, same ``[n_q, k]`` result shape).
 
+    The mesh program comes from the shared `cluster.search_mesh` cache
+    (memoized on mesh/axes/grid config/corpus size), so a second session
+    over the same resident corpus — or one rebuilt after a service restart —
+    reuses the already-traced program instead of compiling its own, the same
+    compile-once discipline the pipelined scan executor applies to shard
+    folds (`cluster.segment_fold`).
+
     ``use_kernel=None`` resolves from the Pallas backend once, at
     construction (the mesh program is built here, not per call).
     """

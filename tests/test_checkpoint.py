@@ -95,6 +95,76 @@ def test_failure_injection_and_resume_bit_identical(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_async_checkpointer_preserves_order_and_contents(tmp_path):
+    """The writer thread replays the exact synchronous commit sequence:
+    save -> prune, in submission order, same bytes on disk."""
+    t = _tree()
+    with ckpt.AsyncCheckpointer() as w:
+        for step in (1, 2, 3, 4):
+            w.submit(ckpt.save, str(tmp_path), step, t)
+            w.submit(ckpt.prune, str(tmp_path), 2)
+        w.drain()
+        assert ckpt.all_steps(str(tmp_path)) == [3, 4]
+    out = ckpt.restore(str(tmp_path), 4, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpointer_poisons_after_error(tmp_path):
+    """First failure skips every later task (a manifest must never claim a
+    commit that failed) and re-raises on drain — and keeps re-raising."""
+    ran = []
+
+    def boom():
+        raise OSError("no space (injected)")
+
+    w = ckpt.AsyncCheckpointer()
+    w.submit(ran.append, "a")
+    w.submit(boom)
+    w.submit(ran.append, "b")  # must never run
+    with pytest.raises(OSError, match="no space"):
+        w.drain()
+    assert ran == ["a"]
+    with pytest.raises(OSError, match="no space"):  # poison is permanent
+        w.submit(ran.append, "c")
+    assert ran == ["a"]
+
+
+def test_async_checkpointer_mid_write_kill_atomic(tmp_path, monkeypatch):
+    """A kill mid-write on the writer thread (simulated: np.save dies while
+    step 2 streams out) leaves only fully-committed steps visible — the
+    atomic rename-commit survives the move off the main thread."""
+    t = _tree()
+    real_save = np.save
+    calls = {"n": 0}
+
+    def dying_save(path, arr):
+        calls["n"] += 1
+        if calls["n"] > len(jax.tree.leaves(t)):  # die inside step 2's write
+            raise KeyboardInterrupt("killed mid-write")
+        return real_save(path, arr)
+
+    monkeypatch.setattr(np, "save", dying_save)
+    w = ckpt.AsyncCheckpointer()
+    w.submit(ckpt.save, str(tmp_path), 1, t)
+    w.submit(ckpt.save, str(tmp_path), 2, t)
+    with pytest.raises(KeyboardInterrupt):
+        w.drain()
+    monkeypatch.setattr(np, "save", real_save)
+    # step 1 committed whole; step 2's partial write never got renamed in
+    assert ckpt.all_steps(str(tmp_path)) == [1]
+    ckpt.restore(str(tmp_path), 1, t)  # and is loadable
+
+
+def test_async_checkpointer_close_idempotent():
+    w = ckpt.AsyncCheckpointer()
+    w.submit(lambda: None)
+    w.close()
+    w.close()  # second close is a no-op
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit(lambda: None)
+
+
 def test_grad_compression_training_converges(tmp_path):
     """Error-feedback top-k compression still reduces the loss."""
     out = train(
