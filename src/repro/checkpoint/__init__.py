@@ -3,6 +3,7 @@ from repro.checkpoint.checkpoint import (
     all_steps,
     latest_step,
     prune,
+    replace_dir,
     restore,
     save,
 )
@@ -10,6 +11,7 @@ from repro.checkpoint.checkpoint import (
 __all__ = [
     "AsyncCheckpointer",
     "save",
+    "replace_dir",
     "restore",
     "latest_step",
     "all_steps",

@@ -39,8 +39,16 @@ def _flatten(tree):
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves], treedef
 
 
-def save(ckpt_dir: str, step: int, tree) -> str:
-    """Write checkpoint for ``step``; returns the final directory."""
+def save(ckpt_dir: str, step: int, tree, *, on_commit=None) -> str:
+    """Write checkpoint for ``step``; returns the final directory.
+
+    ``on_commit(step, tmp_dir)``, if given, runs after the full write but
+    *before* the rename-commit — an error raised there aborts the commit and
+    leaves only the ``.tmp-`` dir behind (exactly the disk state a real I/O
+    failure at that instant would leave). This is the checkpoint-writer
+    fault-injection point used by ``cluster.faults``; a later retry of the
+    same step removes the stale tmp dir and commits cleanly.
+    """
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = os.path.join(ckpt_dir, f".tmp-step_{step:08d}")
     if os.path.exists(tmp):
@@ -58,10 +66,25 @@ def save(ckpt_dir: str, step: int, tree) -> str:
         manifest.append({"key": key, "file": fname, "shape": list(arr.shape), "dtype": true_dtype})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, "leaves": manifest}, f)
+    if on_commit is not None:
+        on_commit(step, tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic commit
     return final
+
+
+def replace_dir(src: str, dst: str) -> None:
+    """Promote checkpoint dir ``src`` over ``dst`` (speculative-win commit).
+
+    Not a single atomic step when ``dst`` already exists (the rmtree+rename
+    pair has a window with no ``dst``), but ``src`` holds a complete,
+    committed lineage throughout — a crash in the window loses no data, and
+    the scan-job resume path treats a missing shard dir as a fresh start.
+    """
+    if os.path.exists(dst):
+        shutil.rmtree(dst)
+    os.replace(src, dst)
 
 
 def all_steps(ckpt_dir: str) -> list[int]:

@@ -13,8 +13,26 @@ checkpoints, progress manifests, and independent kill/resume.
 Scan, experiment jobs, and serve sessions all reduce through this one merge
 contract, so future scaling work (multi-process meshes, real corpora) stays
 local to this package.
+
+`cluster.faults` + `cluster.scheduler` are the Hadoop-style reliability
+layer the paper leans on: deterministic seeded fault injection (crashes,
+writer errors, stragglers, dead workers) driving a work-stealing shard
+scheduler with checkpoint-resumed retries and speculative re-execution —
+under any injected schedule the merged result stays byte-identical to the
+fault-free single-host oracle.
 """
 
+from repro.cluster.faults import (
+    FaultSchedule,
+    FaultSpec,
+    InjectedFault,
+    InjectedWriterError,
+    ShardCancelled,
+    WorkerCrash,
+    build_schedule,
+    parse_fault,
+)
+from repro.cluster.scheduler import SchedulerStats, ShardScheduler
 from repro.cluster.plan import (
     Shard,
     ShardPlan,
@@ -38,16 +56,27 @@ from repro.cluster.job import (
     run_scan_job,
     run_sharded_scan_job,
     shard_ckpt_dir,
+    spec_ckpt_dir,
 )
 
 __all__ = [
     "FOLD_TRACE_COUNTS",
+    "FaultSchedule",
+    "FaultSpec",
+    "InjectedFault",
+    "InjectedWriterError",
+    "SchedulerStats",
     "Shard",
+    "ShardCancelled",
     "ShardPlan",
+    "ShardScheduler",
     "ScanJobResult",
     "ShardedScanResult",
+    "WorkerCrash",
+    "build_schedule",
     "map_shard",
     "mesh_scan_axes",
+    "parse_fault",
     "plan_for_mesh",
     "plan_shards",
     "read_cluster_manifest",
@@ -59,4 +88,5 @@ __all__ = [
     "search_mesh",
     "segment_fold",
     "shard_ckpt_dir",
+    "spec_ckpt_dir",
 ]

@@ -17,9 +17,23 @@ re-reduced without changing the answer) holds here at two nested levels:
   device — and byte-identical to the one-shard job, which is literally this
   code with a trivial plan.
 
-Failure injection mirrors `launch/train.py`: ``fail_at_segment=s`` raises
-after segment ``s``'s checkpoint commits on shard ``fail_at_shard`` — the
-canonical lost-ack kill point.
+Failure injection goes through :mod:`repro.cluster.faults`: a seeded
+``FaultSchedule`` can crash any shard at any segment (before or after the
+checkpoint commit), fail the checkpoint writer mid-commit, slow shards down
+(stragglers), and retire scheduler workers. The legacy
+``fail_at_segment``/``fail_at_shard`` kwargs survive as thin deprecated
+aliases for one transient post-commit crash — the canonical lost-ack kill
+point, and the only fault the old plumbing could express.
+
+**The reliability layer** (:mod:`repro.cluster.scheduler`) turns the
+pipelined executor's static shard-per-worker assignment into a work queue:
+idle workers steal queued shards, failed shards retry with capped
+exponential backoff from their last committed segment checkpoint
+(``max_retries``), and when the queue drains the slowest in-flight shard is
+speculatively re-executed from its checkpoint (``speculative=True``),
+first-committed-wins. None of it changes a byte of any artifact — every
+attempt replays the same chunk-aligned fold, and the reduce stays
+plan-ordered.
 
 **The pipelined executor** (``pipeline=True``, the default) overlaps
 everything the sequential path serializes, without changing a byte of any
@@ -50,7 +64,9 @@ import hashlib
 import json
 import os
 import shutil
-from concurrent.futures import ThreadPoolExecutor
+import threading
+import time
+import warnings
 from typing import Any, Sequence
 
 import jax
@@ -60,8 +76,10 @@ from repro import checkpoint as ckpt
 from repro.core import pipeline, topk
 from repro.core.scoring import CollectionStats, Scorer
 
+from repro.cluster.faults import FaultSchedule, ShardCancelled, WorkerCrash
 from repro.cluster.mapreduce import reduce_states, segment_fold
 from repro.cluster.plan import ShardPlan, plan_shards
+from repro.cluster.scheduler import SchedulerStats, ShardScheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +97,7 @@ class ShardedScanResult:
     state: topk.TopKState  # merged [n_models, n_q, k]
     plan: ShardPlan
     shard_results: tuple[ScanJobResult, ...]
+    scheduler: SchedulerStats | None = None  # retry/steal/speculation counters
 
     @property
     def segments_run(self) -> int:
@@ -169,6 +188,9 @@ def run_scan_job(
     device: jax.Device | None = None,
     pipelined: bool = True,
     prefetch_depth: int = 2,
+    faults: FaultSchedule | None = None,
+    attempt: int = 0,
+    cancel: threading.Event | None = None,
 ) -> ScanJobResult:
     """Run (or resume) one shard's checkpointed multi-scorer scan — the map
     task of the sharded job, and the whole job when the plan has one shard.
@@ -186,8 +208,29 @@ def run_scan_job(
     ``pipelined=False`` is the fully synchronous reference executor.
     Both fold through the shared compiled program (`segment_fold`) and
     produce byte-identical states, checkpoints, and resume points.
+
+    ``faults`` is the deterministic injection schedule consulted at each
+    point of the per-segment loop (see :mod:`repro.cluster.faults`);
+    ``attempt`` is this execution's attempt number for transient-fault
+    matching (0 = first try). ``cancel`` is the scheduler's cooperative stop
+    signal: when a rival attempt commits first, the event is set and this
+    run raises :class:`ShardCancelled` at the next segment boundary.
+    ``fail_at_segment`` is a deprecated alias for one transient post-commit
+    crash at exactly that segment.
     """
     scorers = tuple(scorers)
+    if fail_at_segment is not None:
+        if faults is not None:
+            raise ValueError(
+                "pass the crash as a FaultSpec in `faults`, not via the "
+                "deprecated fail_at_segment kwarg"
+            )
+        warnings.warn(
+            "fail_at_segment is deprecated; use faults=FaultSchedule([...])",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        faults = FaultSchedule.from_legacy(fail_at_segment, shard)
     n_rows = jax.tree.leaves(docs)[0].shape[0]
     n_q = jax.tree.leaves(queries)[0].shape[0]
     segs = pipeline.segments(n_rows, chunk_size, segment_chunks)
@@ -262,10 +305,17 @@ def run_scan_job(
             },
         }
 
+    def check_cancel() -> None:
+        if cancel is not None and cancel.is_set():
+            raise ShardCancelled(
+                f"shard {shard} attempt {attempt} cancelled by the scheduler"
+            )
+
     ran = 0
     if pipelined:
         seg_stream = pipeline.prefetch_segments(
-            docs, segs[start_seg:], device=device, depth=prefetch_depth
+            docs, segs[start_seg:], device=device, depth=prefetch_depth,
+            cancel=cancel,
         )
     else:
         seg_stream = (
@@ -274,26 +324,46 @@ def run_scan_job(
     writer = ckpt.AsyncCheckpointer() if (pipelined and ckpt_dir) else None
     try:
         for seg_idx, seg_docs in zip(range(start_seg, len(segs)), seg_stream):
+            check_cancel()
+            if faults is not None:
+                faults.maybe_delay(shard, seg_idx, attempt, cancel=cancel)
+                check_cancel()  # a cancelled straggler stops mid-nap
+                if faults.crash_at(shard, seg_idx, attempt, "pre_commit"):
+                    # die *before* the commit: work since the last committed
+                    # segment is lost and must be re-folded by the retry
+                    raise WorkerCrash(
+                        f"injected failure before segment {seg_idx} commit"
+                    )
             a, _ = segs[seg_idx]
             state = fold(state, queries, seg_docs, stats, np.int32(doc_id_offset + a))
             ran += 1
             if ckpt_dir:
+                on_commit = (
+                    faults.commit_hook(shard, seg_idx, attempt) if faults else None
+                )
+                save_kw = {} if on_commit is None else {"on_commit": on_commit}
                 if writer is not None:
                     # commit off the critical path; submission order keeps
                     # the on-disk sequence identical to the sync path's
-                    writer.submit(ckpt.save, ckpt_dir, seg_idx + 1, state)
+                    # (an injected writer error poisons this writer exactly
+                    # like a real I/O failure: later tasks skipped, error
+                    # re-raised at the next drain)
+                    writer.submit(ckpt.save, ckpt_dir, seg_idx + 1, state, **save_kw)
                     writer.submit(_write_progress, ckpt_dir, progress(seg_idx + 1))
                     writer.submit(ckpt.prune, ckpt_dir, keep_checkpoints)
                 else:
                     state = jax.block_until_ready(state)
-                    ckpt.save(ckpt_dir, seg_idx + 1, state)
+                    ckpt.save(ckpt_dir, seg_idx + 1, state, **save_kw)
                     _write_progress(ckpt_dir, progress(seg_idx + 1))
                     ckpt.prune(ckpt_dir, keep_checkpoints)
-            if fail_at_segment is not None and seg_idx >= fail_at_segment:
+            if faults is not None and faults.crash_at(
+                shard, seg_idx, attempt, "post_commit"
+            ):
                 # die *after* the commit: the canonical lost-ack kill point
                 if writer is not None:
                     writer.drain()
-                raise RuntimeError(f"injected failure after segment {seg_idx}")
+                raise WorkerCrash(f"injected failure after segment {seg_idx}")
+        check_cancel()  # the prefetch stream ends early on a cancel
         if writer is not None:
             writer.drain()  # barrier: every commit durable before we report done
     except BaseException:
@@ -338,6 +408,36 @@ def read_cluster_manifest(ckpt_dir: str) -> dict | None:
         return json.load(f)
 
 
+def spec_ckpt_dir(primary: str) -> str:
+    """A speculative attempt's private checkpoint dir, next to the primary's."""
+    return primary + ".spec"
+
+
+def _seed_spec_dir(primary: str, spec_dir: str) -> None:
+    """Seed a speculative clone's checkpoint dir from the primary's last
+    committed segment, so the clone re-executes only the shard's tail.
+
+    The primary attempt is still running (that's the point), so its commits
+    and prunes race with this copy; any I/O error falls back to an empty
+    dir — a full re-execution, slower but still byte-identical.
+    """
+    shutil.rmtree(spec_dir, ignore_errors=True)
+    os.makedirs(spec_dir, exist_ok=True)
+    try:
+        latest = ckpt.latest_step(primary)
+        if latest is not None:
+            step = f"step_{latest:08d}"
+            shutil.copytree(
+                os.path.join(primary, step), os.path.join(spec_dir, step)
+            )
+            prog = os.path.join(primary, "progress.json")
+            if os.path.exists(prog):
+                shutil.copy(prog, os.path.join(spec_dir, "progress.json"))
+    except OSError:
+        shutil.rmtree(spec_dir, ignore_errors=True)
+        os.makedirs(spec_dir, exist_ok=True)
+
+
 def run_sharded_scan_job(
     queries: Any,
     docs: Any,
@@ -358,6 +458,11 @@ def run_sharded_scan_job(
     devices: Sequence[jax.Device] | None = None,
     pipelined: bool = True,
     max_workers: int | None = None,
+    faults: FaultSchedule | None = None,
+    max_retries: int = 0,
+    backoff_base: float = 0.1,
+    backoff_cap: float = 5.0,
+    speculative: bool = False,
 ) -> ShardedScanResult:
     """Run (or resume) a full sharded scan job: map every shard, reduce once.
 
@@ -369,14 +474,28 @@ def run_sharded_scan_job(
     ``devices`` spreads shards round-robin (``jax.devices()`` for the
     virtual-device smoke grid; real meshes at multi-process scale).
 
-    ``pipelined=True`` (default) is the overlapped executor: shards run
-    concurrently on a thread pool sized one worker per assigned device
-    (override with ``max_workers``) — so a 4-device host actually scans 4
-    shards at once — and each shard's job streams segments and commits
-    checkpoints asynchronously (see :func:`run_scan_job`). With no
-    ``devices`` (or ``max_workers=1``) shards run in plan order on one
-    worker, which preserves the sequential executor's exact failure
-    ordering (shards after a killed shard never start).
+    ``pipelined=True`` (default) is the overlapped executor: shards become a
+    work queue drained by :class:`repro.cluster.scheduler.ShardScheduler`
+    with one worker per assigned device (override with ``max_workers``) — so
+    a 4-device host actually scans 4 shards at once, and an idle worker
+    steals whatever shard is queued instead of waiting for its round-robin
+    assignment. Each shard's job streams segments and commits checkpoints
+    asynchronously (see :func:`run_scan_job`). With no ``devices`` (or
+    ``max_workers=1``) shards run in plan order on one worker, which
+    preserves the sequential executor's exact failure ordering (shards after
+    a permanently-failed shard never start).
+
+    ``max_retries`` re-runs a failed shard from its last committed segment
+    checkpoint with capped exponential backoff (``backoff_base``/
+    ``backoff_cap``); once a shard exhausts its retries the job drain-stops
+    and raises that shard's *original* error. ``speculative=True`` clones
+    the slowest in-flight shard when the queue drains (first-committed-wins;
+    the winning clone's checkpoint dir is promoted over the primary's).
+    ``faults`` injects deterministic failures for all of the above (see
+    :mod:`repro.cluster.faults`); the legacy ``fail_at_segment``/
+    ``fail_at_shard`` kwargs are deprecated aliases for one transient
+    post-commit crash. Scheduler counters (retries, steals, speculation,
+    dead workers) come back on ``ShardedScanResult.scheduler``.
 
     The final merged state is byte-identical for every shard count *and*
     both executors — chunk alignment keeps per-chunk score bytes equal, the
@@ -385,6 +504,19 @@ def run_sharded_scan_job(
     finish — so run files written from it satisfy the same fingerprint
     contract as the single-host job.
     """
+    if fail_at_segment is not None:
+        warnings.warn(
+            "fail_at_segment/fail_at_shard are deprecated; use "
+            "faults=FaultSchedule([FaultSpec(kind='crash', ...)])",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        legacy = FaultSchedule.from_legacy(fail_at_segment, fail_at_shard)
+        if faults is None:
+            faults = legacy
+        else:
+            faults.add(legacy.specs[0])
+
     n_rows = jax.tree.leaves(docs)[0].shape[0]
     if plan is None:
         plan = plan_shards(n_rows, n_shards=n_shards, chunk_size=chunk_size)
@@ -421,12 +553,22 @@ def run_sharded_scan_job(
             if dev not in staged:
                 staged[dev] = jax.device_put((queries, stats), dev)
 
-    def run_one(shard) -> ScanJobResult:
+    def run_attempt(
+        shard, *, worker=None, attempt=0, cancel=None, speculative=False
+    ) -> ScanJobResult:
         device = None
         q, st = queries, stats
         if devices:
-            device = devices[shard.index % len(devices)]
+            # the executing worker's device, not the shard's round-robin
+            # home — a stolen shard folds wherever it was picked up (byte
+            # identity doesn't care: same compiled program, same bits)
+            owner = shard.index if worker is None else worker
+            device = devices[owner % len(devices)]
             q, st = staged[device]
+        sdir = shard_ckpt_dir(ckpt_dir, plan, shard.index) if ckpt_dir else None
+        if speculative and sdir is not None:
+            primary, sdir = sdir, spec_ckpt_dir(sdir)
+            _seed_spec_dir(primary, sdir)
         return run_scan_job(
             q,
             shard.take(docs),
@@ -435,44 +577,89 @@ def run_sharded_scan_job(
             chunk_size=chunk_size,
             segment_chunks=segment_chunks,
             stats=st,
-            ckpt_dir=shard_ckpt_dir(ckpt_dir, plan, shard.index) if ckpt_dir else None,
-            resume=resume,
+            ckpt_dir=sdir,
+            # retries and speculative clones always resume: the last
+            # committed segment checkpoint is the unit of re-execution
+            resume=resume or attempt > 0 or speculative,
             keep_checkpoints=keep_checkpoints,
-            fail_at_segment=fail_at_segment if shard.index == fail_at_shard else None,
             shard=shard.index,
             n_shards=plan.n_shards,
             doc_id_offset=shard.doc_id_offset,
             use_kernel=use_kernel,
             device=device,
             pipelined=pipelined,
+            faults=faults,
+            attempt=attempt,
+            cancel=cancel,
         )
+
+    def finalize_spec(index: int, won: bool) -> None:
+        # both attempts have stopped (scheduler invariant), so nothing is
+        # writing to either dir: promote the winning clone's lineage over
+        # the primary's, or drop the losing clone's
+        if not ckpt_dir:
+            return
+        primary = shard_ckpt_dir(ckpt_dir, plan, index)
+        sdir = spec_ckpt_dir(primary)
+        if won and os.path.exists(sdir):
+            ckpt.replace_dir(sdir, primary)
+        else:
+            shutil.rmtree(sdir, ignore_errors=True)
 
     workers = 1
     if pipelined:
         workers = max_workers if max_workers else (len(devices) if devices else 1)
         workers = max(1, min(workers, plan.n_shards))
 
-    if workers == 1:
-        # one worker = the sequential executor's shard ordering (a killed
-        # shard stops the job before later shards ever start)
-        results: list[ScanJobResult] = [run_one(s) for s in plan.shards]
+    if not pipelined:
+        # the synchronous reference executor: plan order, one attempt in
+        # flight, retries inline (no threads, no stealing, no speculation)
+        results: list[ScanJobResult] = []
+        attempts: list[int] = []
+        retries = 0
+        for s in plan.shards:
+            failures = 0
+            while True:
+                try:
+                    results.append(run_attempt(s, attempt=failures))
+                    attempts.append(failures + 1)
+                    break
+                except ShardCancelled:
+                    raise  # no scheduler to cancel us — never expected
+                except BaseException:
+                    failures += 1
+                    if failures > max_retries:
+                        raise
+                    retries += 1
+                    time.sleep(
+                        min(backoff_cap, backoff_base * (2 ** (failures - 1)))
+                    )
+        stats_out = SchedulerStats(
+            n_workers=1,
+            attempts=tuple(attempts),
+            retries=retries,
+            steals=0,
+            speculative_launched=0,
+            speculative_won=0,
+            dead_workers=(),
+        )
     else:
-        # device-aware concurrent executor: results (and any failure) are
-        # reported in plan order however shards interleave, so the reduce
-        # below and the raised error are deterministic
-        with ThreadPoolExecutor(
-            max_workers=workers, thread_name_prefix="scan-shard"
-        ) as ex:
-            futures = [ex.submit(run_one, s) for s in plan.shards]
-        results = []
-        errors: dict[int, BaseException] = {}
-        for i, fut in enumerate(futures):
-            try:
-                results.append(fut.result())
-            except BaseException as e:  # noqa: BLE001 — re-raised below
-                errors[i] = e
-        if errors:
-            raise errors[min(errors)]
+        # the reliability layer: work queue + stealing + backoff retries +
+        # speculation; results (and any failure) come back in plan order
+        # however shards interleave, so the reduce below and the raised
+        # error are deterministic
+        sched = ShardScheduler(
+            plan,
+            run_attempt,
+            n_workers=workers,
+            max_retries=max_retries,
+            backoff_base=backoff_base,
+            backoff_cap=backoff_cap,
+            speculative=speculative,
+            faults=faults,
+            finalize_spec=finalize_spec if speculative else None,
+        )
+        results, stats_out = sched.run()
 
     states = [r.state for r in results]
     if devices:
@@ -480,4 +667,6 @@ def run_sharded_scan_job(
         # (one batched transfer — k-bounded payloads, the paper's shuffle)
         states = jax.device_put(states, devices[0])
     merged = reduce_states(states)
-    return ShardedScanResult(state=merged, plan=plan, shard_results=tuple(results))
+    return ShardedScanResult(
+        state=merged, plan=plan, shard_results=tuple(results), scheduler=stats_out
+    )

@@ -78,6 +78,7 @@ def prefetch_segments(
     *,
     device=None,
     depth: int = 2,
+    cancel: threading.Event | None = None,
 ) -> Iterator[Pytree]:
     """Double-buffered host→device segment streaming for pipelined folds.
 
@@ -92,7 +93,11 @@ def prefetch_segments(
     ``device=None`` skips the placement (slices stay wherever ``data``
     lives) but keeps the background slicing overlap. The iterator may be
     abandoned early (e.g. a failure-injection kill): closing it stops the
-    worker thread and drops staged segments.
+    worker thread and drops staged segments. ``cancel`` is an external stop
+    signal — when the scheduler reassigns a shard (speculative rival won,
+    worker retired), setting the event makes the producer stop staging
+    further segments and the iterator end early instead of filling device
+    memory with transfers nobody will fold.
     """
     if depth < 1:
         raise ValueError(f"prefetch depth must be >= 1, got {depth}")
@@ -101,6 +106,8 @@ def prefetch_segments(
         # nothing to overlap with — skip the worker thread (a fully-resumed
         # job streams zero segments; a one-segment shard streams inline)
         for a, b in segments:
+            if cancel is not None and cancel.is_set():
+                return
             seg = jax.tree.map(lambda x: x[a:b], data)
             yield seg if device is None else jax.device_put(seg, device)
         return
@@ -121,6 +128,9 @@ def prefetch_segments(
         try:
             for a, b in segments:
                 if stop.is_set():
+                    return
+                if cancel is not None and cancel.is_set():
+                    _put(_DONE)  # end the stream early, don't strand the consumer
                     return
                 seg = jax.tree.map(lambda x: x[a:b], data)
                 if device is not None:

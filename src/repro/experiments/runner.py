@@ -91,6 +91,9 @@ def run_experiment(
     collection: Collection | None = None,
     pipelined: bool = True,
     max_workers: int | None = None,
+    faults: Any | None = None,
+    max_retries: int = 0,
+    speculative: bool = False,
 ) -> dict:
     """Execute the full lifecycle; returns (and writes) the report dict.
 
@@ -103,6 +106,14 @@ def run_experiment(
     segment prefetch, async checkpoints; byte-identical artifacts either
     way) and ``max_workers`` (caps the shard thread pool; default one
     worker per visible device).
+
+    ``faults`` (a ``repro.cluster.FaultSchedule``), ``max_retries``, and
+    ``speculative`` drive the reliability layer: injected failures are
+    retried from their shard's last committed segment checkpoint and the
+    slowest in-flight shard is speculatively duplicated when the queue
+    drains — run files stay byte-identical regardless, and the report's
+    ``job`` section records what the scheduler did (retries, steals,
+    speculation, fired faults).
     """
     # clamp eval cutoffs to the run depth up front — failing in evaluation
     # after the whole scan job ran would discard all the work
@@ -139,6 +150,9 @@ def run_experiment(
         devices=devices,
         pipelined=pipelined,
         max_workers=max_workers,
+        faults=faults,
+        max_retries=max_retries,
+        speculative=speculative,
     )
 
     run_paths = write_run_files(
@@ -179,6 +193,10 @@ def run_experiment(
             "segments_total": job.segments_total,
             "segments_run": job.segments_run,
             "resumed_from": max(r.resumed_from for r in job.shard_results),
+            "max_retries": max_retries,
+            "speculative": speculative,
+            "scheduler": job.scheduler.describe() if job.scheduler else None,
+            "faults_fired": faults.fired if faults is not None else [],
             "shards": [
                 {
                     "segments_total": r.segments_total,

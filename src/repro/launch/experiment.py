@@ -10,9 +10,17 @@
 The lifecycle is prepare → scan job → run files → eval (see
 `repro.experiments.runner`). The scan job checkpoints per corpus segment
 under ``<out>/ckpt`` — kill the process mid-run and re-invoke with the same
-``--out`` to resume bit-identically (``--fail-at-segment`` injects the kill
-for testing). ``--bench`` additionally sweeps the models-per-pass
-amortization curve into ``BENCH_experiments.json``.
+``--out`` to resume bit-identically. ``--bench`` additionally sweeps the
+models-per-pass amortization curve into ``BENCH_experiments.json``.
+
+Chaos testing goes through the reliability layer: ``--fault-spec`` injects
+deterministic faults (repeatable; ``crash:shard=1,segment=0``,
+``straggler:shard=2,delay=0.01``, ``writer_error:shard=0,segment=1``,
+``dead_worker:worker=0``), ``--fault-seed`` derives a whole seeded schedule,
+and ``--max-retries``/``--speculative`` turn on checkpoint-resumed retries
+and speculative re-execution. Run files are byte-identical to the
+fault-free run under any schedule. (``--fail-at-segment`` is the deprecated
+single-crash alias.)
 """
 
 from __future__ import annotations
@@ -22,6 +30,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro.cluster import FaultSchedule, build_schedule
 from repro.core import scoring
 from repro.experiments import bench as exp_bench
 from repro.experiments import grid as exp_grid
@@ -68,6 +77,19 @@ def print_report(report: dict) -> None:
         f"one pass over {report['n_docs']} docs × {report['n_queries']} queries "
         f"({job['segments_total']} checkpointed segments{shards}{resumed}) =="
     )
+    sched = job.get("scheduler")
+    if sched and (
+        sched["retries"] or sched["steals"] or sched["speculative_launched"]
+        or sched["dead_workers"] or job.get("faults_fired")
+    ):
+        fired = job.get("faults_fired") or []
+        print(
+            f"   reliability: {len(fired)} faults fired, "
+            f"{sched['retries']} retries, {sched['steals']} steals, "
+            f"{sched['speculative_launched']} speculative "
+            f"({sched['speculative_won']} won), "
+            f"dead workers {list(sched['dead_workers'])}"
+        )
     metric_names = list(next(iter(report["metrics"].values())))
     header = "model".ljust(34) + "".join(m.rjust(10) for m in metric_names)
     print(header)
@@ -119,7 +141,23 @@ def main():
     ap.add_argument("--no-resume", action="store_true",
                     help="ignore existing segment checkpoints")
     ap.add_argument("--fail-at-segment", type=int, default=None,
-                    help="inject a failure after this segment commits (testing)")
+                    help="deprecated alias: one crash after this segment "
+                         "commits on --fail-at-shard (use --fault-spec)")
+    ap.add_argument("--fault-spec", action="append", default=[],
+                    help='inject a fault "kind:key=val,..." (repeatable), e.g. '
+                         '"crash:shard=1,segment=0,phase=pre_commit", '
+                         '"straggler:shard=2,delay=0.01", '
+                         '"writer_error:shard=0,segment=1", '
+                         '"dead_worker:worker=0"')
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="derive a whole seeded chaos schedule (crashes × "
+                         "stragglers × writer errors) from this seed")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="re-run a failed shard from its last committed "
+                         "segment checkpoint up to this many times")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculatively re-execute the slowest in-flight "
+                         "shard when the work queue drains")
     ap.add_argument("--bench", action="store_true",
                     help="also sweep the models-per-pass amortization curve")
     ap.add_argument("--bench-sizes", type=int, nargs="+", default=[1, 2, 4, 8])
@@ -128,6 +166,23 @@ def main():
 
     spec = _spec_from_args(args)
     out_dir = args.out if args.experiment is None else f"{args.out}/{spec.name}"
+
+    faults = build_schedule(args.fault_spec) if args.fault_spec else None
+    if args.fault_seed is not None:
+        # schedule geometry from the job's own: segments per shard
+        shard_rows = spec.n_docs // max(1, spec.n_shards)
+        n_segments = max(
+            1, shard_rows // (spec.chunk_size * spec.segment_chunks)
+        )
+        seeded = FaultSchedule.random(
+            args.fault_seed, n_shards=spec.n_shards, n_segments=n_segments
+        )
+        if faults is None:
+            faults = seeded
+        else:
+            for s in seeded.specs:
+                faults.add(s)
+
     coll = runner.prepare_collection(spec, seed=args.seed)  # shared with --bench
     report = runner.run_experiment(
         spec,
@@ -139,6 +194,9 @@ def main():
         collection=coll,
         pipelined=args.pipeline,
         max_workers=args.max_workers,
+        faults=faults,
+        max_retries=args.max_retries,
+        speculative=args.speculative,
     )
     print_report(report)
     print(f"wrote {out_dir}/report.json")

@@ -1,6 +1,7 @@
 """Checkpoint/restart + fault tolerance + elastic restore."""
 
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -154,6 +155,100 @@ def test_async_checkpointer_mid_write_kill_atomic(tmp_path, monkeypatch):
     # step 1 committed whole; step 2's partial write never got renamed in
     assert ckpt.all_steps(str(tmp_path)) == [1]
     ckpt.restore(str(tmp_path), 1, t)  # and is loadable
+
+
+def test_async_writer_shared_by_two_shards_poison_propagates(tmp_path):
+    """Two scan shards sharing one writer (the pipelined executor's
+    shared-writer configuration): a commit failure on shard A's step poisons
+    the queue for BOTH shards — shard B can neither sneak a later save past
+    the failure nor drain without seeing the original error."""
+    a_dir, b_dir = str(tmp_path / "a"), str(tmp_path / "b")
+    a_submitted = threading.Event()
+    errs = []
+
+    def failing_commit(step, tmp):
+        raise OSError("disk full (injected)")
+
+    w = ckpt.AsyncCheckpointer()
+
+    def shard_a():
+        w.submit(ckpt.save, a_dir, 1, _tree())
+        w.submit(ckpt.save, a_dir, 2, _tree(), on_commit=failing_commit)
+        a_submitted.set()
+        try:
+            w.drain()
+        except OSError as e:
+            errs.append(("a", str(e)))
+
+    def shard_b():
+        a_submitted.wait()
+        try:
+            # poison may land at submit time or at drain time depending on
+            # how far the writer has gotten — either way it must surface
+            w.submit(ckpt.save, b_dir, 1, _tree())
+            w.drain()
+        except OSError as e:
+            errs.append(("b", str(e)))
+
+    ta = threading.Thread(target=shard_a)
+    tb = threading.Thread(target=shard_b)
+    ta.start(), tb.start()
+    ta.join(timeout=30), tb.join(timeout=30)
+    assert not ta.is_alive() and not tb.is_alive()
+    assert sorted(s for s, _ in errs) == ["a", "b"]
+    assert all("disk full" in m for _, m in errs)
+    # shard A: step 1 committed whole, step 2's aborted commit left as tmp
+    assert ckpt.all_steps(a_dir) == [1]
+    assert any(e.startswith(".tmp") for e in os.listdir(a_dir))
+    # shard B's save was queued after the failure: skipped, never written
+    assert ckpt.all_steps(b_dir) == []
+    with pytest.raises(OSError, match="disk full"):  # poison survives close
+        w.close()
+
+
+def test_async_writer_kill_while_draining_unblocks_and_stays_atomic(tmp_path):
+    """A kill landing on the writer thread while another thread is blocked
+    in drain() must unblock that drain with the error (skipped tasks still
+    count toward the queue join), leaving only whole checkpoints on disk —
+    and a retry of the failed step on a fresh writer commits cleanly over
+    the stale tmp dir."""
+    release = threading.Event()
+    caught = []
+
+    def killed_commit(step, tmp):
+        raise KeyboardInterrupt("killed mid-commit")
+
+    w = ckpt.AsyncCheckpointer()
+    w.submit(ckpt.save, str(tmp_path), 1, _tree())
+    w.submit(release.wait)  # parks the writer until the drainer is running
+    w.submit(ckpt.save, str(tmp_path), 2, _tree(), on_commit=killed_commit)
+    w.submit(ckpt.save, str(tmp_path), 3, _tree())  # must be skipped
+
+    def drainer():
+        try:
+            w.drain()
+        except KeyboardInterrupt as e:
+            caught.append(str(e))
+
+    t = threading.Thread(target=drainer)
+    t.start()
+    release.set()
+    t.join(timeout=30)
+    assert not t.is_alive(), "drain() hung after a writer-thread kill"
+    assert caught == ["killed mid-commit"]
+    # only step 1 committed; step 2 aborted pre-rename; step 3 skipped
+    assert ckpt.all_steps(str(tmp_path)) == [1]
+    entries = os.listdir(tmp_path)
+    assert ".tmp-step_00000002" in entries
+    assert not any("00000003" in e for e in entries)
+    # retry of the failed step (fresh writer, as the scheduler does after a
+    # backoff) re-opens the poisoned dir and commits over the stale tmp
+    with ckpt.AsyncCheckpointer() as w2:
+        w2.submit(ckpt.save, str(tmp_path), 2, _tree())
+        w2.drain()
+    assert ckpt.all_steps(str(tmp_path)) == [1, 2]
+    assert not any(e.startswith(".tmp") for e in os.listdir(tmp_path))
+    ckpt.restore(str(tmp_path), 2, _tree())
 
 
 def test_async_checkpointer_close_idempotent():

@@ -1,0 +1,414 @@
+"""Chaos suite: the reliability layer under deterministic fault injection.
+
+The core assertion, everywhere: whatever schedule of crashes, writer
+errors, stragglers, speculative duplicates, and dead workers is injected,
+the sharded job completes (or fails with the *original* error once retries
+are exhausted) and its merged state — and every TREC run file written from
+it — is byte-identical to the fault-free single-host oracle. Scheduling
+history must be invisible in the artifacts.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro import cluster
+from repro.cluster.faults import (
+    FaultSchedule,
+    FaultSpec,
+    InjectedWriterError,
+    WorkerCrash,
+    parse_fault,
+)
+from repro.core import anchors, scoring
+from repro.data import synthetic
+from repro.experiments import runner
+
+VOCAB = 1024
+N_DOCS = 256
+CHUNK = 32
+K = 8
+N_SHARDS = 4
+SEGMENTS_PER_SHARD = 2  # 64 rows/shard / (CHUNK * segment_chunks=1)
+
+
+@pytest.fixture(scope="module")
+def collection():
+    corpus = synthetic.make_corpus(n_docs=N_DOCS, vocab=VOCAB, max_len=24, seed=11)
+    stats = anchors.collection_stats(
+        jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths), vocab=VOCAB,
+        chunk_size=CHUNK,
+    )
+    queries = jnp.asarray(synthetic.make_queries(corpus, n_queries=4, seed=12))
+    docs = (jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths))
+    return stats, queries, docs
+
+
+@pytest.fixture(scope="module")
+def oracle(collection):
+    """The fault-free single-host reference every chaos run must match."""
+    stats, queries, docs = collection
+    return cluster.run_sharded_scan_job(
+        queries, docs, _scorers(), k=K, chunk_size=CHUNK, segment_chunks=1,
+        n_shards=1, stats=stats, pipelined=False,
+    )
+
+
+def _scorers():
+    return [scoring.make_variant("ql_lm"), scoring.make_variant("bm25")]
+
+
+def _run(collection, *, faults=None, ckpt_dir=None, **kw):
+    stats, queries, docs = collection
+    args = dict(
+        k=K, chunk_size=CHUNK, segment_chunks=1, n_shards=N_SHARDS,
+        stats=stats, ckpt_dir=ckpt_dir, faults=faults, pipelined=True,
+        max_workers=4,
+    )
+    args.update(kw)
+    return cluster.run_sharded_scan_job(queries, docs, _scorers(), **args)
+
+
+def assert_matches_oracle(got, oracle, *, err=""):
+    np.testing.assert_array_equal(
+        np.asarray(got.state.ids), np.asarray(oracle.state.ids), err_msg=err
+    )
+    assert (
+        np.asarray(got.state.scores).tobytes()
+        == np.asarray(oracle.state.scores).tobytes()
+    ), err
+
+
+# -- seeded chaos schedules ---------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_seeded_chaos_byte_identical_to_oracle(collection, oracle, tmp_path, seed):
+    """Crash pre-/post-commit × straggler × writer-error, derived from one
+    seed, against the full reliability stack (retries + stealing +
+    speculation): run files stay byte-identical to the fault-free oracle."""
+    schedule = FaultSchedule.random(
+        seed, n_shards=N_SHARDS, n_segments=SEGMENTS_PER_SHARD
+    )
+    job = _run(
+        collection, faults=schedule, ckpt_dir=str(tmp_path / "ckpt"),
+        max_retries=3, speculative=True,
+    )
+    assert_matches_oracle(job, oracle, err=f"seed {seed}")
+    # every seeded schedule contains at least one crash, and every fired
+    # crash/writer-error kills an attempt that another attempt — a backoff
+    # retry or an already-in-flight speculative rival — must cover
+    hard = [f for f in schedule.fired if f["kind"] in ("crash", "writer_error")]
+    assert hard, schedule.describe()
+    assert job.scheduler.retries + job.scheduler.speculative_launched >= 1
+    assert sum(job.scheduler.attempts) >= N_SHARDS + 1
+    # the run-file layer sees none of it
+    pa = runner.write_run_files(
+        str(tmp_path / "ra"), _scorers(), oracle.state, tag_prefix="t"
+    )
+    pb = runner.write_run_files(
+        str(tmp_path / "rb"), _scorers(), job.state, tag_prefix="t"
+    )
+    for name in pa:
+        assert open(pa[name], "rb").read() == open(pb[name], "rb").read(), name
+
+
+def test_chaos_survives_without_checkpoints(collection, oracle):
+    """No ckpt_dir: retries re-fold the whole shard instead of resuming —
+    slower, same bytes."""
+    schedule = FaultSchedule.random(
+        1, n_shards=N_SHARDS, n_segments=SEGMENTS_PER_SHARD
+    )
+    job = _run(collection, faults=schedule, max_retries=3, speculative=True)
+    assert_matches_oracle(job, oracle)
+
+
+# -- retry semantics ----------------------------------------------------------
+
+
+def test_pre_commit_crash_retries_from_last_checkpoint(collection, oracle, tmp_path):
+    """A pre-commit crash loses the in-flight segment; the retry resumes
+    from the last committed one and re-folds only the tail."""
+    schedule = FaultSchedule(
+        [FaultSpec(kind="crash", shard=1, segment=1, phase="pre_commit")]
+    )
+    job = _run(
+        collection, faults=schedule, ckpt_dir=str(tmp_path / "c"), max_retries=1
+    )
+    assert_matches_oracle(job, oracle)
+    assert schedule.count_fired("crash") == 1
+    assert job.scheduler.retries == 1
+    assert job.scheduler.attempts[1] == 2
+    # the retry resumed at segment 1 (segment 0's commit survived the crash)
+    assert job.shard_results[1].resumed_from == 1
+    assert job.shard_results[1].segments_run == 1
+
+
+def test_permanent_failure_surfaces_original_error(collection, tmp_path):
+    """A shard that fails on every attempt exhausts max_retries and the job
+    raises that shard's original WorkerCrash — not a scheduler wrapper.
+
+    The permanent fault must be *pre*-commit: a post-commit crash at a
+    committed segment can never be permanent, because every retry resumes
+    past it (which is the whole point of checkpoint-unit re-execution)."""
+    schedule = FaultSchedule(
+        [FaultSpec(kind="crash", shard=2, segment=1, phase="pre_commit",
+                   attempts="all")]
+    )
+    with pytest.raises(WorkerCrash, match="injected failure before segment 1"):
+        _run(
+            collection, faults=schedule, ckpt_dir=str(tmp_path / "p"),
+            max_retries=2,
+        )
+    assert schedule.count_fired("crash") == 3  # 1 first try + 2 retries
+    # segment 0's commit is still durable: clear the fault and the job
+    # completes by resuming shard 2 from its checkpoint
+    job = _run(collection, ckpt_dir=str(tmp_path / "p"))
+    assert job.shard_results[2].resumed_from == 1
+
+
+def test_lowest_failed_shard_error_wins(collection, tmp_path):
+    """Two permanently-failing shards: the raised error is deterministically
+    the lowest-indexed shard's, whatever order the failures land in."""
+    schedule = FaultSchedule(
+        [
+            FaultSpec(kind="crash", shard=3, segment=0, attempts="all"),
+            FaultSpec(kind="crash", shard=1, segment=1, attempts="all",
+                      phase="pre_commit"),
+        ]
+    )
+    with pytest.raises(WorkerCrash, match="before segment 1"):
+        _run(
+            collection, faults=schedule, ckpt_dir=str(tmp_path / "p"),
+            max_retries=0,
+        )
+
+
+# -- writer errors ------------------------------------------------------------
+
+
+def test_writer_error_poisons_then_retry_reopens_dir(collection, oracle, tmp_path):
+    """An injected checkpoint-writer error leaves a poisoned dir (stale
+    ``.tmp-`` and no committed step); the retry re-opens that same dir,
+    overwrites the stale tmp, and commits cleanly."""
+    schedule = FaultSchedule(
+        [FaultSpec(kind="writer_error", shard=0, segment=1)]
+    )
+    job = _run(
+        collection, faults=schedule, ckpt_dir=str(tmp_path / "w"), max_retries=1
+    )
+    assert_matches_oracle(job, oracle)
+    assert schedule.count_fired("writer_error") == 1
+    assert job.scheduler.retries == 1
+    sdir = str(tmp_path / "w" / "shard_0000")
+    assert ckpt.all_steps(sdir) == [1, 2]
+    # the retry's commit of the same step replaced the poisoned tmp dir
+    assert not [d for d in os.listdir(sdir) if d.startswith(".tmp-")]
+    prog = cluster.read_progress(sdir)
+    assert prog["shards"]["0"]["complete"]
+
+
+def test_writer_error_without_retries_fails_job(collection, tmp_path):
+    schedule = FaultSchedule(
+        [FaultSpec(kind="writer_error", shard=0, segment=0)]
+    )
+    with pytest.raises(InjectedWriterError, match="injected checkpoint-writer"):
+        _run(collection, faults=schedule, ckpt_dir=str(tmp_path / "w"))
+
+
+# -- stragglers + speculation -------------------------------------------------
+
+
+def test_straggler_triggers_speculation(collection, oracle, tmp_path):
+    """One slow shard, idle peers: when the queue drains the scheduler
+    launches a speculative clone from the straggler's last checkpoint;
+    whichever attempt commits first wins, bytes unchanged."""
+    schedule = FaultSchedule(
+        [
+            # only attempt 0 is slow: the clone runs at full speed, so the
+            # race is real but the artifacts must not care who wins
+            FaultSpec(kind="straggler", shard=3, delay_s=0.4, attempts=(0,)),
+        ]
+    )
+    job = _run(
+        collection, faults=schedule, ckpt_dir=str(tmp_path / "s"),
+        speculative=True,
+    )
+    assert_matches_oracle(job, oracle)
+    assert schedule.count_fired("straggler") >= 1
+    assert job.scheduler.speculative_launched >= 1
+
+
+def test_speculative_win_promotes_clone_checkpoints(collection, oracle, tmp_path):
+    """When the clone wins, its checkpoint dir is promoted over the
+    primary's: the on-disk lineage is the winner's, no .spec dir remains."""
+    schedule = FaultSchedule(
+        [FaultSpec(kind="straggler", shard=2, delay_s=0.6, attempts=(0,))]
+    )
+    job = _run(
+        collection, faults=schedule, ckpt_dir=str(tmp_path / "s"),
+        speculative=True,
+    )
+    assert_matches_oracle(job, oracle)
+    root = str(tmp_path / "s")
+    assert not [d for d in os.listdir(root) if d.endswith(".spec")]
+    prog = cluster.read_progress(os.path.join(root, "shard_0002"))
+    assert prog["shards"]["2"]["complete"]
+
+
+# -- dead workers + work stealing ---------------------------------------------
+
+
+def test_dead_worker_job_completes_via_stealing(collection, oracle, tmp_path):
+    """One permanently-dead worker: its queued shards drain through the
+    survivors and the job still completes, byte-identical."""
+    schedule = FaultSchedule([FaultSpec(kind="dead_worker", worker=0)])
+    job = _run(
+        collection, faults=schedule, ckpt_dir=str(tmp_path / "d")
+    )
+    assert_matches_oracle(job, oracle)
+    assert job.scheduler.dead_workers == (0,)
+    assert job.scheduler.steals >= 1
+    assert all(a == 1 for a in job.scheduler.attempts)
+
+
+def test_all_workers_dead_is_an_error(collection):
+    schedule = FaultSchedule(
+        [FaultSpec(kind="dead_worker", worker=w) for w in range(4)]
+    )
+    with pytest.raises(RuntimeError, match="unscanned shards"):
+        _run(collection, faults=schedule)
+
+
+# -- legacy aliases -----------------------------------------------------------
+
+
+def test_legacy_kwargs_fire_once_on_one_shard(collection, tmp_path):
+    """The deprecated kwargs now mean exactly one transient post-commit
+    crash: ``fail_at_segment`` fires on ``==`` (not ``>=``), only on
+    ``fail_at_shard``, and only on attempt 0 — so the same invocation,
+    re-run over the same dir, resumes *past* the crash point and completes
+    instead of dying again at the next segment."""
+    stats, queries, docs = collection
+    kw = dict(
+        k=K, chunk_size=CHUNK, segment_chunks=1, n_shards=N_SHARDS,
+        stats=stats, ckpt_dir=str(tmp_path / "l"),
+    )
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(RuntimeError, match="injected failure after segment 0"):
+            cluster.run_sharded_scan_job(
+                queries, docs, _scorers(), fail_at_segment=0, fail_at_shard=2,
+                **kw,
+            )
+    # resumed run keeps the same legacy kwargs: under the old >= plumbing it
+    # would crash again at segment 1; under == it runs to completion
+    with pytest.warns(DeprecationWarning):
+        job = cluster.run_sharded_scan_job(
+            queries, docs, _scorers(), fail_at_segment=0, fail_at_shard=2, **kw
+        )
+    assert job.shard_results[2].resumed_from == 1
+    # only shard 2 ever crashed: every other shard completed on the first try
+    for i, r in enumerate(job.shard_results):
+        if i != 2:
+            assert r.resumed_from in (0, SEGMENTS_PER_SHARD)
+
+
+def test_legacy_kwarg_conflicts_with_faults(collection):
+    stats, queries, docs = collection
+    with pytest.raises(ValueError, match="deprecated fail_at_segment"):
+        cluster.run_scan_job(
+            queries, docs, _scorers(), k=K, chunk_size=CHUNK, segment_chunks=1,
+            stats=stats, fail_at_segment=0, faults=FaultSchedule(),
+        )
+
+
+# -- spec parsing -------------------------------------------------------------
+
+
+def test_parse_fault_round_trips():
+    spec = parse_fault("crash:shard=1,segment=0,phase=pre_commit")
+    assert spec == FaultSpec(
+        kind="crash", shard=1, segment=0, phase="pre_commit"
+    )
+    assert parse_fault("straggler:shard=2,delay=0.05").delay_s == 0.05
+    assert parse_fault("crash:shard=0,segment=1,attempts=all").attempts is None
+    assert parse_fault("crash:shard=0,segment=1,attempts=0|2").attempts == (0, 2)
+    assert parse_fault("dead_worker:worker=3,after_shards=1").after_shards == 1
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "explode:shard=1",
+        "crash:shard=1",  # crash needs a segment
+        "writer_error:shard=0",  # so does writer_error
+        "dead_worker:after_shards=1",  # dead_worker needs a worker
+        "crash:shard=1,segment=0,wat=1",
+        "straggler:delay",
+    ],
+)
+def test_parse_fault_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_fault(bad)
+
+
+# -- the whole stack on virtual devices ---------------------------------------
+
+_CHAOS_MULTIDEV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro import cluster
+from repro.cluster.faults import FaultSchedule
+from repro.core import anchors, scoring
+from repro.data import synthetic
+
+corpus = synthetic.make_corpus(n_docs=256, vocab=1024, max_len=24, seed=11)
+docs = (jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths))
+stats = anchors.collection_stats(*docs, vocab=1024, chunk_size=32)
+queries = jnp.asarray(synthetic.make_queries(corpus, n_queries=4, seed=12))
+scorers = [scoring.make_variant("ql_lm"), scoring.make_variant("bm25")]
+kw = dict(k=8, chunk_size=32, segment_chunks=1, stats=stats)
+
+oracle = cluster.run_sharded_scan_job(
+    queries, docs, scorers, n_shards=1, pipelined=False, **kw
+)
+results = {}
+for seed in (0, 1, 2):
+    schedule = FaultSchedule.random(seed, n_shards=4, n_segments=2)
+    job = cluster.run_sharded_scan_job(
+        queries, docs, scorers, n_shards=4, devices=jax.devices(),
+        max_retries=3, speculative=True, faults=schedule, **kw
+    )
+    results[f"seed{seed}"] = bool(
+        (np.asarray(job.state.ids) == np.asarray(oracle.state.ids)).all()
+        and np.asarray(job.state.scores).tobytes()
+        == np.asarray(oracle.state.scores).tobytes()
+    )
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_chaos_on_four_virtual_devices_subprocess():
+    """Seeded chaos across 4 placeholder devices (own process so this test
+    session keeps its single real device): one scheduler worker per device,
+    faults and speculation landing on genuinely different devices."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHAOS_MULTIDEV_SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        # full env inherited: a stripped env stalls JAX for minutes at
+        # interpreter shutdown on this platform
+        env={**os.environ, "PYTHONPATH": "src"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert all(out.values()), out

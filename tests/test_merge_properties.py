@@ -1,0 +1,161 @@
+"""Property-based tests for the lexicographic merge contract.
+
+`topk.merge_lex`/`topk.reduce_lex` carry the whole byte-identity story:
+whatever shard grouping, merge order, or fault-driven re-execution produced
+the per-shard states, the reduced top-k must equal the single-host oracle's
+— identical ids AND identical score *bytes*. The hand-picked cases in
+`tests/test_cluster.py` pin a few corners; here hypothesis drives random
+tied-score corpora through random shard partitions and random merge
+parenthesizations. Ties are the hard part: scores are drawn from a small
+palette of exactly-representable floats so every draw is full of them, and
+the id tie-break is what keeps the result well-defined.
+
+Runs under the `tests/_hyp.py` shim: skipped (not failed) when hypothesis
+is not installed; CI installs requirements-dev.txt and runs the full suite.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topk
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+# a palette of exactly-representable float32s: every corpus drawn from it
+# is riddled with score ties, forcing the id tie-break to do the ranking
+SCORES = (-2.0, -0.5, 0.0, 0.25, 0.5, 1.0, 1.5, 2.0)
+
+
+def lex_topk_oracle(pairs, k):
+    """Global (score desc, id asc) top-k as plain python — the oracle."""
+    ranked = sorted(pairs, key=lambda p: (-p[0], p[1]))[:k]
+    scores = np.full(k, -np.inf, np.float32)
+    ids = np.full(k, -1, np.int32)
+    for i, (s, d) in enumerate(ranked):
+        scores[i] = s
+        ids[i] = d
+    return topk.TopKState(scores=jnp.asarray(scores), ids=jnp.asarray(ids))
+
+
+def shard_state(pairs, k):
+    """One shard's fold result: its own lex-sorted top-k (possibly empty)."""
+    return lex_topk_oracle(pairs, k)
+
+
+def assert_bit_identical(got, want):
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+    assert (
+        np.asarray(got.scores).tobytes() == np.asarray(want.scores).tobytes()
+    )
+
+
+if HAVE_HYPOTHESIS:
+    corpus_strategy = st.lists(
+        st.sampled_from(SCORES), min_size=1, max_size=48
+    )
+else:  # placeholder: @given skips these tests before the body runs
+    corpus_strategy = None
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_reduce_lex_invariant_to_sharding_and_merge_order(data):
+    """Random tied-score corpus, random shard partition, random merge
+    parenthesization: reduced ids and score bytes equal the global oracle."""
+    scores = data.draw(corpus_strategy, label="scores")
+    k = data.draw(st.integers(1, 8), label="k")
+    n_shards = data.draw(st.integers(1, 6), label="n_shards")
+    pairs = list(zip(scores, range(len(scores))))  # unique ids, many ties
+
+    owner = data.draw(
+        st.lists(
+            st.integers(0, n_shards - 1),
+            min_size=len(pairs),
+            max_size=len(pairs),
+        ),
+        label="owner",
+    )
+    shards = [[p for p, o in zip(pairs, owner) if o == s] for s in range(n_shards)]
+    states = [shard_state(sp, k) for sp in shards]  # empty shards stay in
+
+    order = data.draw(st.permutations(range(n_shards)), label="order")
+    states = [states[i] for i in order]
+    # random parenthesization: repeatedly merge a random adjacent pair —
+    # with the shuffle above this walks arbitrary merge trees
+    while len(states) > 1:
+        i = data.draw(st.integers(0, len(states) - 2), label="merge_at")
+        merged = topk.merge_lex(states[i], states[i + 1])
+        states = states[:i] + [merged] + states[i + 2 :]
+
+    assert_bit_identical(states[0], lex_topk_oracle(pairs, k))
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_merge_lex_is_commutative(data):
+    """merge(a, b) == merge(b, a) bit for bit, even through heavy ties.
+
+    Note merge_lex is a *multiset* merge — it is deliberately not
+    idempotent (merging a state with itself duplicates entries). The
+    reliability layer keeps duplicate shard contributions out of the
+    reduce via first-committed-wins, not via the merge.
+    """
+    scores = data.draw(corpus_strategy, label="scores")
+    k = data.draw(st.integers(1, 8), label="k")
+    pairs = list(zip(scores, range(len(scores))))
+    cut = data.draw(st.integers(0, len(pairs)), label="cut")
+    a = shard_state(pairs[:cut], k)
+    b = shard_state(pairs[cut:], k)
+
+    ab = topk.merge_lex(a, b)
+    ba = topk.merge_lex(b, a)
+    assert_bit_identical(ab, ba)
+    assert_bit_identical(ab, lex_topk_oracle(pairs, k))
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_reduce_lex_matches_batched_oracle(data):
+    """Batched states ([n_q, k]): every query row reduces independently to
+    its own oracle — the shape `cluster.reduce_states` actually merges."""
+    n_q = data.draw(st.integers(1, 4), label="n_q")
+    k = data.draw(st.integers(1, 6), label="k")
+    n_shards = data.draw(st.integers(1, 4), label="n_shards")
+    per_query_pairs = []
+    shard_states = []
+    for s in range(n_shards):
+        n = data.draw(st.integers(0, 16), label=f"shard{s}_n")
+        rows_s, rows_i = [], []
+        for q in range(n_q):
+            if len(per_query_pairs) <= q:
+                per_query_pairs.append([])
+            # ids globally unique per query row via a shard-offset base
+            pairs = [
+                (data.draw(st.sampled_from(SCORES)), s * 1000 + j)
+                for j in range(n)
+            ]
+            per_query_pairs[q].extend(pairs)
+            row = lex_topk_oracle(pairs, k)
+            rows_s.append(row.scores)
+            rows_i.append(row.ids)
+        shard_states.append(
+            topk.TopKState(scores=jnp.stack(rows_s), ids=jnp.stack(rows_i))
+        )
+    got = topk.reduce_lex(shard_states)
+    for q in range(n_q):
+        want = lex_topk_oracle(per_query_pairs[q], k)
+        row = topk.TopKState(scores=got.scores[q], ids=got.ids[q])
+        assert_bit_identical(row, want)
+
+
+def test_merge_lex_rejects_shape_mismatch():
+    a = topk.init(4, ())
+    b = topk.init(5, ())
+    with pytest.raises(ValueError, match="merge_lex shape mismatch"):
+        topk.merge_lex(a, b)
+
+
+def test_reduce_lex_requires_at_least_one_state():
+    with pytest.raises(ValueError, match="at least one"):
+        topk.reduce_lex([])
