@@ -2,12 +2,14 @@
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import anchors, invindex, scoring
 from repro.data import synthetic
 
@@ -30,7 +32,7 @@ def make_collection(seed: int = 0):
 
 
 def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
-    """Median wall seconds."""
+    """Median wall seconds on the monotonic performance clock."""
     for _ in range(warmup):
         fn()
     times = []
@@ -39,3 +41,15 @@ def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
         fn()
         times.append(time.perf_counter() - t0)
     return float(np.median(times))
+
+
+def write_bench_json(payload: dict, path: str) -> str:
+    """Persist a BENCH_*.json with the measurement-provenance block stamped
+    (host, backend, jax version, device count) — numbers from different
+    machines/backends must be distinguishable in the perf trajectory."""
+    payload = dict(payload)
+    payload.setdefault("provenance", obs.provenance())
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path

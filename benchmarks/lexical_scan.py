@@ -22,13 +22,11 @@ id-identical to the host fold.
 
 from __future__ import annotations
 
-import json
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import make_collection, timeit
+from benchmarks.common import make_collection, timeit, write_bench_json
 from repro.core import pipeline, scan, scoring, topk
 from repro.data import synthetic
 from repro.kernels import ops
@@ -133,9 +131,7 @@ def run(csv_rows: list):
         "speedup_tiled_vs_seed": speedup,
         "models_per_pass": grid_curve,
     }
-    with open("BENCH_lexical.json", "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+    write_bench_json(payload, "BENCH_lexical.json")
 
     csv_rows.append(("lexical_seed_tf_scan", seed_s * 1e6, f"n_docs={n_docs}"))
     csv_rows.append(

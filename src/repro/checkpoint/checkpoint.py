@@ -23,11 +23,14 @@ import os
 import queue as queue_mod
 import shutil
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
+
+from repro import obs
 
 # numpy can't serialize ml_dtypes (bfloat16 etc.) natively; store them as
 # same-width unsigned ints and record the true dtype in the manifest.
@@ -51,26 +54,33 @@ def save(ckpt_dir: str, step: int, tree, *, on_commit=None) -> str:
     """
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = os.path.join(ckpt_dir, f".tmp-step_{step:08d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp, exist_ok=True)
-    named, _ = _flatten(tree)
-    manifest = []
-    for i, (key, leaf) in enumerate(named):
-        arr = np.asarray(jax.device_get(leaf))
-        true_dtype = str(arr.dtype)
-        if true_dtype in _VIEW_AS:
-            arr = arr.view(_VIEW_AS[true_dtype])
-        fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
-        manifest.append({"key": key, "file": fname, "shape": list(arr.shape), "dtype": true_dtype})
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"step": step, "leaves": manifest}, f)
-    if on_commit is not None:
-        on_commit(step, tmp)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)  # atomic commit
+    t_save = time.monotonic()
+    with obs.tracer().span("ckpt.save", "ckpt", step=step):
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        named, _ = _flatten(tree)
+        manifest = []
+        for i, (key, leaf) in enumerate(named):
+            arr = np.asarray(jax.device_get(leaf))
+            true_dtype = str(arr.dtype)
+            if true_dtype in _VIEW_AS:
+                arr = arr.view(_VIEW_AS[true_dtype])
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest.append({"key": key, "file": fname, "shape": list(arr.shape), "dtype": true_dtype})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f)
+        if on_commit is not None:
+            on_commit(step, tmp)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        t_rename = time.monotonic()
+        with obs.tracer().span("ckpt.rename", "ckpt", step=step):
+            os.replace(tmp, final)  # atomic commit
+        met = obs.metrics()
+        met.histogram("ckpt.rename_s").observe(time.monotonic() - t_rename)
+        met.histogram("ckpt.save_s").observe(time.monotonic() - t_save)
     return final
 
 
@@ -165,6 +175,9 @@ class AsyncCheckpointer:
                 self._error = e
             finally:
                 self._queue.task_done()
+                obs.metrics().gauge("ckpt.writer_queue_depth").set(
+                    self._queue.qsize()
+                )
 
     def _check(self):
         # the error stays set: a failed commit poisons the writer for good,
@@ -179,6 +192,7 @@ class AsyncCheckpointer:
             raise RuntimeError("AsyncCheckpointer is closed")
         self._check()
         self._queue.put((fn, args, kwargs))
+        obs.metrics().gauge("ckpt.writer_queue_depth").set(self._queue.qsize())
 
     def drain(self) -> None:
         """Block until all submitted work is on disk; re-raise writer errors."""

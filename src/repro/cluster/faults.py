@@ -48,6 +48,8 @@ from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
+from repro import obs
+
 KINDS = ("crash", "writer_error", "straggler", "dead_worker")
 PHASES = ("pre_commit", "post_commit")
 
@@ -258,6 +260,9 @@ class FaultSchedule:
     def _record(self, spec: FaultSpec, **ctx) -> None:
         with self._lock:
             self._fired.append({"kind": spec.kind, **ctx})
+        # every firing doubles as a trace marker on the injecting thread —
+        # recording only; no control flow ever depends on the tracer
+        obs.tracer().instant(f"fault.{spec.kind}", "fault", **ctx)
 
     @property
     def fired(self) -> list[dict]:
@@ -345,12 +350,18 @@ class FaultSchedule:
                 and shards_done >= spec.after_shards
             ):
                 with self._lock:
-                    if worker not in self._dead_recorded:
+                    fresh = worker not in self._dead_recorded
+                    if fresh:
                         self._dead_recorded.add(worker)
                         self._fired.append(
                             {"kind": "dead_worker", "worker": worker,
                              "after_shards": shards_done}
                         )
+                if fresh:
+                    obs.tracer().instant(
+                        "fault.dead_worker", "fault",
+                        worker=worker, after_shards=shards_done,
+                    )
                 return True
         return False
 

@@ -73,6 +73,7 @@ import jax
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro import obs
 from repro.core import pipeline, topk
 from repro.core.scoring import CollectionStats, Scorer
 
@@ -147,6 +148,11 @@ def _job_fingerprint(
         for leaf in jax.tree.leaves(stats):
             h.update(np.asarray(leaf).tobytes())
     return h.hexdigest()[:16]
+
+
+# distinguishes "stream ended early" (scheduler cancel closed the prefetch
+# stream) from any real segment value when pulling with a default
+_STREAM_ENDED = object()
 
 
 def _write_json(path: str, payload: dict) -> None:
@@ -312,6 +318,8 @@ def run_scan_job(
             )
 
     ran = 0
+    tr = obs.tracer()
+    met = obs.metrics()
     if pipelined:
         seg_stream = pipeline.prefetch_segments(
             docs, segs[start_seg:], device=device, depth=prefetch_depth,
@@ -321,64 +329,98 @@ def run_scan_job(
         seg_stream = (
             jax.tree.map(lambda x: x[a:b], docs) for a, b in segs[start_seg:]
         )
+    seg_iter = iter(seg_stream)
     writer = ckpt.AsyncCheckpointer() if (pipelined and ckpt_dir) else None
-    try:
-        for seg_idx, seg_docs in zip(range(start_seg, len(segs)), seg_stream):
-            check_cancel()
-            if faults is not None:
-                faults.maybe_delay(shard, seg_idx, attempt, cancel=cancel)
-                check_cancel()  # a cancelled straggler stops mid-nap
-                if faults.crash_at(shard, seg_idx, attempt, "pre_commit"):
-                    # die *before* the commit: work since the last committed
-                    # segment is lost and must be re-folded by the retry
-                    raise WorkerCrash(
-                        f"injected failure before segment {seg_idx} commit"
+    shard_span = tr.span(
+        "shard.run", "job", shard=shard, attempt=attempt,
+        resumed_from=start_seg, n_segments=len(segs),
+    )
+    with shard_span:
+        try:
+            for seg_idx in range(start_seg, len(segs)):
+                check_cancel()
+                # time spent waiting on the segment stream = pipeline-stall
+                # time (prefetch not keeping up with the fold) made visible
+                with tr.span(
+                    "segment.prefetch_wait", "pipeline", shard=shard, segment=seg_idx
+                ):
+                    seg_docs = next(seg_iter, _STREAM_ENDED)
+                if seg_docs is _STREAM_ENDED:
+                    break  # the prefetch stream ends early on a cancel
+                if faults is not None:
+                    faults.maybe_delay(shard, seg_idx, attempt, cancel=cancel)
+                    check_cancel()  # a cancelled straggler stops mid-nap
+                    if faults.crash_at(shard, seg_idx, attempt, "pre_commit"):
+                        # die *before* the commit: work since the last committed
+                        # segment is lost and must be re-folded by the retry
+                        raise WorkerCrash(
+                            f"injected failure before segment {seg_idx} commit"
+                        )
+                a, _ = segs[seg_idx]
+                t_fold = time.monotonic()
+                with tr.span("segment.fold", "job", shard=shard, segment=seg_idx):
+                    state = fold(
+                        state, queries, seg_docs, stats, np.int32(doc_id_offset + a)
                     )
-            a, _ = segs[seg_idx]
-            state = fold(state, queries, seg_docs, stats, np.int32(doc_id_offset + a))
-            ran += 1
-            if ckpt_dir:
-                on_commit = (
-                    faults.commit_hook(shard, seg_idx, attempt) if faults else None
-                )
-                save_kw = {} if on_commit is None else {"on_commit": on_commit}
-                if writer is not None:
-                    # commit off the critical path; submission order keeps
-                    # the on-disk sequence identical to the sync path's
-                    # (an injected writer error poisons this writer exactly
-                    # like a real I/O failure: later tasks skipped, error
-                    # re-raised at the next drain)
-                    writer.submit(ckpt.save, ckpt_dir, seg_idx + 1, state, **save_kw)
-                    writer.submit(_write_progress, ckpt_dir, progress(seg_idx + 1))
-                    writer.submit(ckpt.prune, ckpt_dir, keep_checkpoints)
-                else:
-                    state = jax.block_until_ready(state)
-                    ckpt.save(ckpt_dir, seg_idx + 1, state, **save_kw)
-                    _write_progress(ckpt_dir, progress(seg_idx + 1))
-                    ckpt.prune(ckpt_dir, keep_checkpoints)
-            if faults is not None and faults.crash_at(
-                shard, seg_idx, attempt, "post_commit"
-            ):
-                # die *after* the commit: the canonical lost-ack kill point
-                if writer is not None:
+                met.histogram("job.segment_fold_s").observe(time.monotonic() - t_fold)
+                ran += 1
+                if ckpt_dir:
+                    on_commit = (
+                        faults.commit_hook(shard, seg_idx, attempt) if faults else None
+                    )
+                    save_kw = {} if on_commit is None else {"on_commit": on_commit}
+                    if writer is not None:
+                        # commit off the critical path; submission order keeps
+                        # the on-disk sequence identical to the sync path's
+                        # (an injected writer error poisons this writer exactly
+                        # like a real I/O failure: later tasks skipped, error
+                        # re-raised at the next drain). The actual save/rename
+                        # spans appear on the writer thread (ckpt.save).
+                        with tr.span(
+                            "segment.commit_submit", "ckpt",
+                            shard=shard, segment=seg_idx,
+                        ):
+                            writer.submit(
+                                ckpt.save, ckpt_dir, seg_idx + 1, state, **save_kw
+                            )
+                            writer.submit(
+                                _write_progress, ckpt_dir, progress(seg_idx + 1)
+                            )
+                            writer.submit(ckpt.prune, ckpt_dir, keep_checkpoints)
+                    else:
+                        with tr.span(
+                            "segment.commit", "ckpt", shard=shard, segment=seg_idx
+                        ):
+                            state = jax.block_until_ready(state)
+                            ckpt.save(ckpt_dir, seg_idx + 1, state, **save_kw)
+                            _write_progress(ckpt_dir, progress(seg_idx + 1))
+                            ckpt.prune(ckpt_dir, keep_checkpoints)
+                if faults is not None and faults.crash_at(
+                    shard, seg_idx, attempt, "post_commit"
+                ):
+                    # die *after* the commit: the canonical lost-ack kill point
+                    if writer is not None:
+                        writer.drain()
+                    raise WorkerCrash(f"injected failure after segment {seg_idx}")
+            check_cancel()  # cooperative stop observed at the segment boundary
+            if writer is not None:
+                # barrier: every commit durable before we report done; waiting
+                # here = the writer is the bottleneck, visible in the trace
+                with tr.span("ckpt.drain_wait", "ckpt", shard=shard):
                     writer.drain()
-                raise WorkerCrash(f"injected failure after segment {seg_idx}")
-        check_cancel()  # the prefetch stream ends early on a cancel
-        if writer is not None:
-            writer.drain()  # barrier: every commit durable before we report done
-    except BaseException:
-        if writer is not None:
-            try:
+        except BaseException:
+            if writer is not None:
+                try:
+                    writer.close()
+                except BaseException:
+                    pass  # the in-flight error (e.g. the injected kill) wins
+                writer = None
+            raise
+        finally:
+            if pipelined:
+                seg_stream.close()  # stop the prefetch thread on any exit path
+            if writer is not None:
                 writer.close()
-            except BaseException:
-                pass  # the in-flight error (e.g. the injected kill) wins
-            writer = None
-        raise
-    finally:
-        if pipelined:
-            seg_stream.close()  # stop the prefetch thread on any exit path
-        if writer is not None:
-            writer.close()
     if ckpt_dir and start_seg == len(segs):
         _write_progress(ckpt_dir, progress(len(segs)))  # idempotent re-run
     return ScanJobResult(

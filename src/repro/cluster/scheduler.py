@@ -40,6 +40,7 @@ import threading
 import time
 from typing import Any, Callable
 
+from repro import obs
 from repro.cluster.faults import FaultSchedule, ShardCancelled
 from repro.cluster.plan import ShardPlan
 
@@ -145,6 +146,7 @@ class ShardScheduler:
         plan-ordered results. Raises the lowest-indexed failed shard's
         original error, or RuntimeError when shards were left unscanned
         (e.g. every worker died)."""
+        obs.metrics().gauge("sched.queue_depth").set(len(self._queue))
         threads = [
             threading.Thread(
                 target=self._worker_loop, args=(w,), name=f"shard-sched-{w}"
@@ -188,6 +190,10 @@ class ShardScheduler:
                 with self._cond:
                     self._dead_workers.append(w)
                     self._cond.notify_all()
+                obs.tracer().instant(
+                    "sched.dead_worker", "sched",
+                    worker=w, shards_done=shards_done,
+                )
                 return
             task = self._next_task(w)
             if task is None:
@@ -233,8 +239,16 @@ class ShardScheduler:
                         # deterministic preference: lowest shard index first
                         task = min(ready, key=lambda t: t.shard)
                         self._queue.remove(task)
+                        obs.metrics().gauge("sched.queue_depth").set(
+                            len(self._queue)
+                        )
                         if task.shard % self.n_workers != w:
                             self._steals += 1
+                            obs.tracer().instant(
+                                "sched.steal", "sched",
+                                shard=task.shard, worker=w,
+                                home=task.shard % self.n_workers,
+                            )
                         self._register(task)
                         return task
                     self._cond.wait(
@@ -279,25 +293,37 @@ class ShardScheduler:
         self._spec_launched += 1
         attempt = self._attempt_counter[shard]
         self._attempt_counter[shard] = attempt + 1
+        obs.tracer().instant(
+            "sched.speculate", "sched", shard=shard, attempt=attempt
+        )
         return _Task(shard=shard, attempt=attempt, speculative=True, ready_at=0.0)
 
     def _execute(self, task: _Task, w: int) -> None:
         shard_obj = self.plan.shards[task.shard]
         run = self._find_running(task)
-        try:
-            result = self.run_attempt(
-                shard_obj,
-                worker=w,
-                attempt=task.attempt,
-                cancel=run.cancel,
-                speculative=task.speculative,
-            )
-        except ShardCancelled:
-            self._on_cancelled(task)
-        except BaseException as e:  # noqa: BLE001 — scheduler owns retry policy
-            self._on_failure(task, e)
-        else:
-            self._on_success(task, result)
+        span = obs.tracer().span(
+            "shard.attempt", "sched",
+            shard=task.shard, attempt=task.attempt, worker=w,
+            speculative=task.speculative,
+        )
+        with span:
+            try:
+                result = self.run_attempt(
+                    shard_obj,
+                    worker=w,
+                    attempt=task.attempt,
+                    cancel=run.cancel,
+                    speculative=task.speculative,
+                )
+            except ShardCancelled:
+                span.set(outcome="cancelled")
+                self._on_cancelled(task)
+            except BaseException as e:  # noqa: BLE001 — scheduler owns retry policy
+                span.set(outcome="failed")
+                self._on_failure(task, e)
+            else:
+                span.set(outcome="ok")
+                self._on_success(task, result)
 
     def _find_running(self, task: _Task) -> _Running:
         with self._cond:
@@ -337,6 +363,11 @@ class ShardScheduler:
                 self._spec_won[task.shard] = task.speculative
                 for rival in remaining:
                     rival.cancel.set()
+                    obs.tracer().instant(
+                        "sched.cancel", "sched",
+                        shard=task.shard, rival_attempt=rival.attempt,
+                        winner_attempt=task.attempt,
+                    )
             self._maybe_finalize(task.shard)
             self._cond.notify_all()
 
@@ -377,6 +408,12 @@ class ShardScheduler:
                         speculative=False,
                         ready_at=time.monotonic() + delay,
                     )
+                )
+                obs.metrics().gauge("sched.queue_depth").set(len(self._queue))
+                obs.tracer().instant(
+                    "sched.retry", "sched",
+                    shard=task.shard, failures=failures, backoff_s=delay,
+                    error=type(err).__name__,
                 )
                 self._attempt_counter[task.shard] += 1
                 self._retries += 1

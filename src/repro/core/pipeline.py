@@ -26,6 +26,8 @@ from typing import Any, Callable, Iterator, Sequence, TypeVar
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 S = TypeVar("S")
 
 Pytree = Any
@@ -125,18 +127,24 @@ def prefetch_segments(
         return False
 
     def _worker():
+        tr = obs.tracer()
+        occupancy = obs.metrics().gauge("pipeline.prefetch_occupancy")
         try:
-            for a, b in segments:
+            for i, (a, b) in enumerate(segments):
                 if stop.is_set():
                     return
                 if cancel is not None and cancel.is_set():
                     _put(_DONE)  # end the stream early, don't strand the consumer
                     return
-                seg = jax.tree.map(lambda x: x[a:b], data)
-                if device is not None:
-                    seg = jax.device_put(seg, device)
+                # the producer half of the pipeline: slice + transfer for
+                # segment i while the consumer folds segment i-1
+                with tr.span("prefetch.stage", "pipeline", segment_pos=i, rows=b - a):
+                    seg = jax.tree.map(lambda x: x[a:b], data)
+                    if device is not None:
+                        seg = jax.device_put(seg, device)
                 if not _put(seg):
                     return
+                occupancy.set(q.qsize())
             _put(_DONE)
         except BaseException as e:  # noqa: BLE001 — surfaced to the consumer
             _put(e)

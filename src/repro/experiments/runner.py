@@ -20,13 +20,15 @@ import dataclasses
 import json
 import os
 import re
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cluster import plan_shards, run_sharded_scan_job
+from repro import obs
+from repro.cluster import FaultSchedule, plan_shards, run_sharded_scan_job
 from repro.core import anchors, topk
 from repro.data import synthetic
 from repro.eval import evaluate_run, paired_randomization_test, trec
@@ -94,6 +96,7 @@ def run_experiment(
     faults: Any | None = None,
     max_retries: int = 0,
     speculative: bool = False,
+    trace_out: str | None = None,
 ) -> dict:
     """Execute the full lifecycle; returns (and writes) the report dict.
 
@@ -114,13 +117,80 @@ def run_experiment(
     drains — run files stay byte-identical regardless, and the report's
     ``job`` section records what the scheduler did (retries, steals,
     speculation, fired faults).
+
+    ``trace_out`` enables the observability layer for this run: a fresh
+    tracer + metrics registry are installed for the lifecycle, the Chrome
+    ``trace_event`` JSON lands at that path (with the JSONL event log next
+    to it), and the report's ``job.obs`` block carries the trace paths, the
+    metrics rollup, and the per-shard time-per-phase summary. Tracing only
+    observes — run files are byte-identical with it on or off
+    (chaos-suite-enforced).
     """
+    if fail_at_segment is not None:
+        # convert here rather than forwarding, so the DeprecationWarning
+        # points at *this function's caller*, not at the forwarding call
+        # inside this module (test-pinned via warning filename)
+        warnings.warn(
+            "fail_at_segment/fail_at_shard are deprecated; use "
+            "faults=FaultSchedule([FaultSpec(kind='crash', ...)])",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        legacy = FaultSchedule.from_legacy(fail_at_segment, fail_at_shard)
+        if faults is None:
+            faults = legacy
+        else:
+            faults.add(legacy.specs[0])
+        fail_at_segment = None
+
+    prev_obs = None
+    if trace_out is not None:
+        prev_obs = obs.install(obs.Tracer(), obs.Metrics())
+    try:
+        return _run_experiment_traced(
+            spec,
+            out_dir=out_dir,
+            seed=seed,
+            resume=resume,
+            collection=collection,
+            pipelined=pipelined,
+            max_workers=max_workers,
+            faults=faults,
+            max_retries=max_retries,
+            speculative=speculative,
+            trace_out=trace_out,
+        )
+    finally:
+        if prev_obs is not None:
+            obs.install(*prev_obs)
+
+
+def _run_experiment_traced(
+    spec: ExperimentSpec,
+    *,
+    out_dir: str,
+    seed: int,
+    resume: bool,
+    collection: Collection | None,
+    pipelined: bool,
+    max_workers: int | None,
+    faults: Any | None,
+    max_retries: int,
+    speculative: bool,
+    trace_out: str | None,
+) -> dict:
+    """The lifecycle body, running under whatever instruments are installed."""
+    tr = obs.tracer()
+    met = obs.metrics()
     # clamp eval cutoffs to the run depth up front — failing in evaluation
     # after the whole scan job ran would discard all the work
     if spec.k < max(spec.eval_ks):
         ks = tuple(c for c in spec.eval_ks if c <= spec.k) or (spec.k,)
         spec = dataclasses.replace(spec, eval_ks=ks)
-    coll = collection if collection is not None else prepare_collection(spec, seed=seed)
+    with tr.span("experiment.prepare", "experiment", experiment=spec.name, seed=seed):
+        coll = (
+            collection if collection is not None else prepare_collection(spec, seed=seed)
+        )
     scorers = spec.scorers()
     docs = (jnp.asarray(coll.corpus.tokens), jnp.asarray(coll.corpus.lengths))
 
@@ -133,51 +203,74 @@ def run_experiment(
         spec.n_docs, n_shards=spec.n_shards, chunk_size=spec.chunk_size
     )
     devices = jax.devices() if spec.n_shards > 1 else None
-    job = run_sharded_scan_job(
-        jnp.asarray(coll.queries),
-        docs,
-        scorers,
-        k=spec.k,
-        chunk_size=spec.chunk_size,
-        segment_chunks=spec.segment_chunks,
-        plan=plan,
-        stats=coll.stats,
-        ckpt_dir=os.path.join(out_dir, "ckpt"),
-        resume=resume,
-        fail_at_segment=fail_at_segment,
-        fail_at_shard=fail_at_shard,
-        use_kernel=spec.use_kernel,
-        devices=devices,
-        pipelined=pipelined,
-        max_workers=max_workers,
-        faults=faults,
-        max_retries=max_retries,
-        speculative=speculative,
-    )
+    with tr.span(
+        "experiment.scan", "experiment", n_shards=plan.n_shards, pipelined=pipelined
+    ):
+        job = run_sharded_scan_job(
+            jnp.asarray(coll.queries),
+            docs,
+            scorers,
+            k=spec.k,
+            chunk_size=spec.chunk_size,
+            segment_chunks=spec.segment_chunks,
+            plan=plan,
+            stats=coll.stats,
+            ckpt_dir=os.path.join(out_dir, "ckpt"),
+            resume=resume,
+            use_kernel=spec.use_kernel,
+            devices=devices,
+            pipelined=pipelined,
+            max_workers=max_workers,
+            faults=faults,
+            max_retries=max_retries,
+            speculative=speculative,
+        )
 
-    run_paths = write_run_files(
-        os.path.join(out_dir, "runs"), scorers, job.state, tag_prefix=spec.name
-    )
-    trec.write_qrels(os.path.join(out_dir, "qrels.txt"), coll.qrels)
+    with tr.span("experiment.run_files", "experiment"):
+        run_paths = write_run_files(
+            os.path.join(out_dir, "runs"), scorers, job.state, tag_prefix=spec.name
+        )
+        trec.write_qrels(os.path.join(out_dir, "qrels.txt"), coll.qrels)
 
-    reports = {}
-    per_query_ap = {}
-    for m, s in enumerate(scorers):
-        rep = evaluate_run(np.asarray(job.state.ids)[m], coll.qrels, ks=spec.eval_ks)
-        reports[s.name] = rep["aggregate"]
-        per_query_ap[s.name] = rep["per_query"]["ap"]
+    with tr.span("experiment.eval", "experiment"):
+        reports = {}
+        per_query_ap = {}
+        for m, s in enumerate(scorers):
+            rep = evaluate_run(
+                np.asarray(job.state.ids)[m], coll.qrels, ks=spec.eval_ks
+            )
+            reports[s.name] = rep["aggregate"]
+            per_query_ap[s.name] = rep["per_query"]["ap"]
 
-    significance = {}
-    baseline = spec.baseline if spec.baseline in per_query_ap else scorers[0].name
-    for name, ap in per_query_ap.items():
-        if name == baseline:
-            continue
-        res = paired_randomization_test(ap, per_query_ap[baseline], seed=seed)
-        significance[name] = {
-            "vs": baseline,
-            "metric": "ap",
-            "diff": res.diff,
-            "p_value": res.p_value,
+        significance = {}
+        baseline = spec.baseline if spec.baseline in per_query_ap else scorers[0].name
+        for name, ap in per_query_ap.items():
+            if name == baseline:
+                continue
+            res = paired_randomization_test(ap, per_query_ap[baseline], seed=seed)
+            significance[name] = {
+                "vs": baseline,
+                "metric": "ap",
+                "diff": res.diff,
+                "p_value": res.p_value,
+            }
+
+    obs_block = None
+    if trace_out is not None:
+        # the trace lives *outside* runs/ so artifact byte-identity checks
+        # (traced run vs tracing-off oracle) diff the run dirs untouched
+        trace_dir = os.path.dirname(trace_out)
+        if trace_dir:
+            os.makedirs(trace_dir, exist_ok=True)
+        jsonl_path = os.path.splitext(trace_out)[0] + ".jsonl"
+        obs.export.write_chrome_trace(trace_out, tr, metrics=met)
+        obs.export.write_jsonl(jsonl_path, tr)
+        obs_block = {
+            "trace": trace_out,
+            "events_jsonl": jsonl_path,
+            "n_events": len(tr),
+            "metrics": met.summary(),
+            "phases": obs.export.phase_rollup(tr),
         }
 
     report = {
@@ -197,6 +290,7 @@ def run_experiment(
             "speculative": speculative,
             "scheduler": job.scheduler.describe() if job.scheduler else None,
             "faults_fired": faults.fired if faults is not None else [],
+            "obs": obs_block,
             "shards": [
                 {
                     "segments_total": r.segments_total,

@@ -90,6 +90,15 @@ def print_report(report: dict) -> None:
             f"({sched['speculative_won']} won), "
             f"dead workers {list(sched['dead_workers'])}"
         )
+    o = job.get("obs")
+    if o:
+        print(f"   trace: {o['n_events']} events -> {o['trace']}")
+        for label, names in o.get("phases", {}).items():
+            parts = ", ".join(
+                f"{name} ×{agg['count']} {agg['total_s'] * 1e3:.1f}ms"
+                for name, agg in names.items()
+            )
+            print(f"     {label}: {parts}")
     metric_names = list(next(iter(report["metrics"].values())))
     header = "model".ljust(34) + "".join(m.rjust(10) for m in metric_names)
     print(header)
@@ -158,6 +167,13 @@ def main():
     ap.add_argument("--speculative", action="store_true",
                     help="speculatively re-execute the slowest in-flight "
                          "shard when the work queue drains")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace_event JSON here (open in "
+                         "chrome://tracing or ui.perfetto.dev; the JSONL "
+                         "event log lands next to it). Default: "
+                         "<out>/trace.json unless --no-trace")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable tracing (metrics-only run)")
     ap.add_argument("--bench", action="store_true",
                     help="also sweep the models-per-pass amortization curve")
     ap.add_argument("--bench-sizes", type=int, nargs="+", default=[1, 2, 4, 8])
@@ -166,6 +182,11 @@ def main():
 
     spec = _spec_from_args(args)
     out_dir = args.out if args.experiment is None else f"{args.out}/{spec.name}"
+    trace_out = None
+    if not args.no_trace:
+        trace_out = args.trace_out or f"{out_dir}/trace.json"
+    elif args.trace_out:
+        raise SystemExit("--trace-out and --no-trace are mutually exclusive")
 
     faults = build_schedule(args.fault_spec) if args.fault_spec else None
     if args.fault_seed is not None:
@@ -197,6 +218,7 @@ def main():
         faults=faults,
         max_retries=args.max_retries,
         speculative=args.speculative,
+        trace_out=trace_out,
     )
     print_report(report)
     print(f"wrote {out_dir}/report.json")

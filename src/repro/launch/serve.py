@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.configs import reduced_config
 from repro.core import anchors
 from repro.data import synthetic
+from repro.obs import Metrics
 from repro.distributed.sharding import rules_for_mesh
 from repro.launch.mesh import make_test_mesh, set_mesh
 from repro.models import transformer as tfm
@@ -58,10 +59,12 @@ def serve_search(
         chunk_size=cfg.chunk_size,
         stats=stats,
     )
+    registry = Metrics()  # this service's own histograms (shutdown summary)
     service = RetrievalService(
         {"lexical": session},
         max_batch=max_batch or n_queries,
         max_delay=max_delay_ms * 1e-3,
+        registry=registry,
     )
 
     print(f"== streaming {batches} request waves of {n_queries} queries "
@@ -80,6 +83,26 @@ def serve_search(
                 f"({rec.us_per_query:.0f} µs/query)"
             )
         print(f"wave {b}: top-1 of q0 = doc {int(results[rids[0]].ids[0])}")
+
+    # shutdown rollup: full latency/queue-wait/batch-size distributions,
+    # not just the per-block means printed above
+    summary = registry.summary()
+    n_req = summary["counters"].get("serve.requests", 0)
+    n_blk = summary["counters"].get("serve.batches", 0)
+    print(f"== service summary: {n_req} requests over {n_blk} blocks ==")
+    for name, label, scale, unit in (
+        ("serve.queue_wait_s", "queue wait", 1e3, "ms"),
+        ("serve.latency_s", "scan latency", 1e3, "ms"),
+        ("serve.batch_size", "batch size", 1, ""),
+    ):
+        h = summary["histograms"].get(name)
+        if h and h.get("count"):
+            print(
+                f"  {label:<12} p50={h['p50'] * scale:8.2f}{unit}  "
+                f"p95={h['p95'] * scale:8.2f}{unit}  "
+                f"p99={h['p99'] * scale:8.2f}{unit}  "
+                f"max={h['max'] * scale:8.2f}{unit}"
+            )
 
     print(f"== C1 sweep: batch sizes {sweep_sizes} ==")
     payload = sweep_batch_sizes(

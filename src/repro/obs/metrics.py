@@ -1,0 +1,245 @@
+"""Counters, gauges, and fixed-bucket latency histograms.
+
+The numeric half of the observability layer: where `repro.obs.trace` keeps
+a *timeline*, this module keeps *aggregates* — monotone counters
+(attempts, steals, requests), last-value gauges (queue depths, prefetch
+buffer occupancy), and fixed-bucket histograms with quantile readout
+(p50/p95/p99 of serve queue-wait, batch size, checkpoint-save duration).
+The serve layer's histograms are the live latency/QPS surface the
+ROADMAP's SLO-driven adaptive microbatching will consume.
+
+Histograms are *fixed-bucket* on purpose: observation cost is a bisect +
+one increment under a per-instrument lock (no reservoir, no sort at
+readout), memory is constant however many observations arrive, and two
+histograms with the same bounds merge by adding counts — the same
+mergeable-combiner discipline as the paper's top-k states. Quantiles are
+read out by linear interpolation inside the bucket that crosses the
+cumulative rank, so p50/p95/p99 are deterministic functions of the counts.
+
+Instruments are created through a :class:`Metrics` registry
+(get-or-create by name, thread-safe); `repro.obs` holds the process
+default. All mutation is lock-protected per instrument — cross-thread
+increments never lose updates (test-pinned) — and locks are held for a
+few arithmetic ops only, nowhere near any fold or dispatch critical path.
+"""
+
+from __future__ import annotations
+
+import bisect
+import threading
+from typing import Sequence
+
+__all__ = ["Counter", "Gauge", "Histogram", "Metrics", "latency_buckets"]
+
+
+def latency_buckets(
+    lo: float = 1e-5, hi: float = 60.0, factor: float = 2.0
+) -> tuple[float, ...]:
+    """Geometric bucket bounds for duration-in-seconds histograms.
+
+    Default spans 10µs → 60s at 2× resolution (~23 buckets) — wide enough
+    for everything from a checkpoint rename to a straggling shard, cheap
+    enough to keep per instrument.
+    """
+    bounds = []
+    b = lo
+    while b < hi:
+        bounds.append(b)
+        b *= factor
+    bounds.append(hi)
+    return tuple(bounds)
+
+
+class Counter:
+    """A monotone counter. ``inc`` is lock-protected: concurrent workers
+    never lose increments (the ``+=`` read-modify-write is not atomic)."""
+
+    __slots__ = ("name", "_lock", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+    def describe(self) -> int:
+        return self._value
+
+
+class Gauge:
+    """A last-value-wins instrument (queue depth, buffer occupancy).
+
+    Tracks the max ever set alongside the current value — for bounded
+    queues, "how full did it get" is the number that matters after the
+    fact.
+    """
+
+    __slots__ = ("name", "_lock", "_value", "_max")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._value = 0.0
+        self._max = 0.0
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._value = value
+            if value > self._max:
+                self._max = value
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    @property
+    def max(self) -> float:
+        return self._max
+
+    def describe(self) -> dict:
+        return {"value": self._value, "max": self._max}
+
+
+class Histogram:
+    """Fixed-bucket histogram with interpolated quantile readout.
+
+    ``bounds`` are ascending bucket upper edges; observations above the
+    last edge land in a +inf overflow bucket. ``observe`` is a bisect +
+    increment under the instrument lock; ``quantile`` interpolates
+    linearly within the crossing bucket (clamped to the observed min/max,
+    so a one-element histogram reads back that element exactly).
+    """
+
+    __slots__ = ("name", "bounds", "_lock", "_counts", "_n", "_sum", "_min", "_max")
+
+    def __init__(self, name: str, bounds: Sequence[float] | None = None):
+        self.name = name
+        self.bounds = tuple(bounds) if bounds is not None else latency_buckets()
+        if not self.bounds or list(self.bounds) != sorted(set(self.bounds)):
+            raise ValueError(f"histogram bounds must be ascending+unique: {bounds}")
+        self._lock = threading.Lock()
+        self._counts = [0] * (len(self.bounds) + 1)  # +1 overflow bucket
+        self._n = 0
+        self._sum = 0.0
+        self._min = float("inf")
+        self._max = float("-inf")
+
+    def observe(self, value: float) -> None:
+        i = bisect.bisect_left(self.bounds, value)
+        with self._lock:
+            self._counts[i] += 1
+            self._n += 1
+            self._sum += value
+            if value < self._min:
+                self._min = value
+            if value > self._max:
+                self._max = value
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self._n if self._n else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Interpolated quantile in [0, 1]; 0.0 on an empty histogram."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        with self._lock:
+            if self._n == 0:
+                return 0.0
+            rank = q * self._n
+            cum = 0
+            for i, c in enumerate(self._counts):
+                if c == 0:
+                    continue
+                if cum + c >= rank:
+                    lo = self.bounds[i - 1] if i > 0 else min(self._min, self.bounds[0])
+                    hi = self.bounds[i] if i < len(self.bounds) else self._max
+                    frac = (rank - cum) / c
+                    val = lo + (hi - lo) * max(0.0, min(1.0, frac))
+                    # never report outside the observed range
+                    return max(self._min, min(self._max, val))
+                cum += c
+            return self._max  # pragma: no cover — rank <= n always crosses
+
+    def summary(self) -> dict:
+        """The rollup exported into reports: count/mean/min/max + p50/95/99."""
+        if self._n == 0:
+            return {"count": 0}
+        return {
+            "count": self._n,
+            "mean": self.mean,
+            "min": self._min,
+            "max": self._max,
+            "p50": self.quantile(0.50),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+        }
+
+    describe = summary
+
+
+class Metrics:
+    """Get-or-create registry of named instruments (one per process area).
+
+    A name is permanently bound to its first-created instrument kind;
+    asking for the same name as a different kind is a bug and raises.
+    ``summary()`` renders everything into plain dicts for ``report.json``
+    (the ``job.obs.metrics`` block) and the JSONL exporter.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: dict[str, Counter | Gauge | Histogram] = {}
+
+    def _get(self, name: str, kind, factory):
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = self._instruments[name] = factory()
+            elif not isinstance(inst, kind):
+                raise TypeError(
+                    f"metric {name!r} is a {type(inst).__name__}, not a {kind.__name__}"
+                )
+            return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter, lambda: Counter(name))
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge, lambda: Gauge(name))
+
+    def histogram(self, name: str, bounds: Sequence[float] | None = None) -> Histogram:
+        return self._get(name, Histogram, lambda: Histogram(name, bounds))
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._instruments)
+
+    def summary(self) -> dict:
+        """Plain-dict rollup of every instrument, grouped by kind."""
+        with self._lock:
+            items = list(self._instruments.items())
+        out: dict[str, dict] = {"counters": {}, "gauges": {}, "histograms": {}}
+        for name, inst in sorted(items):
+            if isinstance(inst, Counter):
+                out["counters"][name] = inst.describe()
+            elif isinstance(inst, Gauge):
+                out["gauges"][name] = inst.describe()
+            else:
+                out["histograms"][name] = inst.summary()
+        return out

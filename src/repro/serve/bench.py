@@ -14,6 +14,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.serve.service import RetrievalService
 
 
@@ -74,6 +75,14 @@ def sweep_batch_sizes(
 
 
 def write_bench_json(payload: dict, path: str = "BENCH_serve.json") -> str:
+    """Persist a benchmark payload, stamped with where it was measured.
+
+    Every ``BENCH_*.json`` carries a ``provenance`` block (host, backend,
+    jax version, device count) so perf numbers recorded on different
+    machines or backends are comparable — or visibly not.
+    """
+    payload = dict(payload)
+    payload.setdefault("provenance", obs.provenance())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

@@ -71,6 +71,7 @@ class QueryBlock:
     trigger: str  # "size" | "deadline" | "flush"
     closed_at: float
     oldest_arrival: float
+    arrivals: tuple[float, ...] = ()  # per-request admission times, rid-aligned
 
     @property
     def n_padded(self) -> int:
@@ -148,6 +149,7 @@ class Microbatcher:
             trigger=trigger,
             closed_at=now,
             oldest_arrival=take[0].arrival,
+            arrivals=tuple(r.arrival for r in take),
         )
 
     def drain(self, now: float) -> list[QueryBlock]:

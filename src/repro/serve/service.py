@@ -24,6 +24,8 @@ from typing import Callable, Mapping
 
 import numpy as np
 
+from repro import obs
+from repro.obs.metrics import Metrics
 from repro.serve.microbatch import Microbatcher, QueryBlock, unpad_results
 from repro.serve.session import DenseSession, LexicalSession, ShardedLexicalSession
 
@@ -53,6 +55,11 @@ class BatchRecord:
         return self.latency_s / max(self.n_real, 1) * 1e6
 
 
+# batch sizes are small integers bucketed like the padder buckets them:
+# powers of two (latency buckets would waste resolution below 1.0)
+_BATCH_BOUNDS = tuple(float(1 << i) for i in range(11))  # 1 .. 1024
+
+
 class RetrievalService:
     """Dispatcher over resident-corpus sessions, one microbatcher per kind."""
 
@@ -64,11 +71,16 @@ class RetrievalService:
         max_delay: float = 5e-3,
         min_bucket: int = 8,
         clock: Callable[[], float] = time.monotonic,
+        registry: Metrics | None = None,
     ):
         if not sessions:
             raise ValueError("need at least one session")
         self.sessions = dict(sessions)
         self._clock = clock
+        # ``registry`` pins the service's histograms/counters to one owned
+        # Metrics (the launcher's shutdown summary); default is the process
+        # registry, resolved per dispatch so obs.session() swaps apply
+        self._registry = registry
         self._batchers = {
             kind: Microbatcher(
                 max_batch=max_batch,
@@ -105,8 +117,14 @@ class RetrievalService:
 
     def _dispatch(self, kind: str, block: QueryBlock) -> dict[int, SearchResult]:
         session = self.sessions[kind]
+        tr = obs.tracer()
         t0 = self._clock()
-        state = session.search(block.queries)
+        with tr.span(
+            "serve.dispatch", "serve",
+            kind=kind, n_real=block.n_real, n_padded=block.n_padded,
+            trigger=block.trigger,
+        ):
+            state = session.search(block.queries)
         latency = self._clock() - t0
         self.metrics.append(
             BatchRecord(
@@ -118,6 +136,19 @@ class RetrievalService:
                 latency_s=latency,
             )
         )
+        met = self._registry if self._registry is not None else obs.metrics()
+        met.counter("serve.requests").inc(block.n_real)
+        met.counter("serve.batches").inc()
+        met.histogram("serve.batch_size", bounds=_BATCH_BOUNDS).observe(block.n_real)
+        met.histogram("serve.queue_wait_s").observe(
+            block.closed_at - block.oldest_arrival
+        )
+        met.histogram("serve.latency_s").observe(latency)
+        # per-request lifecycle spans (enqueue → reply), recorded at reply
+        # time on the service clock (== the tracer clock in production)
+        done = self._clock()
+        for rid, arrival in zip(block.rids, block.arrivals):
+            tr.record("serve.request", arrival, done, "serve", rid=rid, kind=kind)
         scores = unpad_results(np.asarray(state.scores), block.n_real)
         ids = unpad_results(np.asarray(state.ids), block.n_real)
         return {

@@ -19,6 +19,7 @@ import pytest
 
 from repro import checkpoint as ckpt
 from repro import cluster
+from repro import obs
 from repro.cluster.faults import (
     FaultSchedule,
     FaultSpec,
@@ -36,6 +37,15 @@ CHUNK = 32
 K = 8
 N_SHARDS = 4
 SEGMENTS_PER_SHARD = 2  # 64 rows/shard / (CHUNK * segment_chunks=1)
+
+
+@pytest.fixture(autouse=True)
+def tracing_on():
+    """Every chaos test runs with the observability layer recording: the
+    byte-identity contract must hold with tracing ON (tracing observes,
+    never decides — a trace-dependent branch would show up here first)."""
+    with obs.session():
+        yield
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,483 @@
+"""Observability layer: tracer/metrics semantics, exporters, and the two
+contracts the subsystem lives or dies by —
+
+* **near-zero cost off, correct under concurrency on**: the disabled
+  tracer returns a shared no-op span (no clock read, no allocation);
+  enabled instruments never lose cross-thread updates and spans record
+  even when their body raises (the timeline survives a mid-segment crash);
+* **tracing observes, never decides**: a traced experiment produces
+  byte-identical run files to an untraced one, faults and all.
+
+Plus the deprecation-alias contract (satellite): ``fail_at_segment``
+warnings must point at the *caller's* line at every entry point —
+``run_scan_job``, ``run_sharded_scan_job``, and ``run_experiment``.
+"""
+
+import json
+import threading
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cluster, obs
+from repro.cluster.faults import FaultSchedule, FaultSpec, WorkerCrash
+from repro.core import anchors
+from repro.data import synthetic
+from repro.experiments import grid as exp_grid
+from repro.experiments import runner
+from repro.obs import export
+from repro.obs.metrics import Histogram, Metrics
+from repro.obs.trace import NULL_SPAN, Tracer
+from repro.serve import LexicalSession, RetrievalService
+
+VOCAB = 1024
+N_DOCS = 256
+CHUNK = 32
+K = 8
+N_SHARDS = 2
+
+
+# -- tracer semantics ---------------------------------------------------------
+
+
+class StepClock:
+    """Deterministic tracer clock: each read advances by ``dt``."""
+
+    def __init__(self, dt=1.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+def test_disabled_tracer_is_a_shared_noop():
+    tr = Tracer(enabled=False)
+    assert tr.span("x") is NULL_SPAN
+    with tr.span("x", "cat", a=1) as sp:
+        sp.set(b=2)
+    tr.instant("mark")
+    tr.record("win", 0.0, 1.0)
+    assert len(tr) == 0
+
+
+def test_spans_record_name_cat_attrs_thread_and_duration():
+    tr = Tracer(clock=StepClock())
+    with tr.span("outer", "job", shard=3) as sp:
+        sp.set(outcome="ok")
+        with tr.span("inner", "job"):
+            pass
+    ev = tr.events()
+    assert [e.name for e in ev] == ["inner", "outer"]  # LIFO close order
+    outer = ev[1]
+    assert outer.cat == "job" and outer.ph == "X"
+    assert outer.attrs == {"shard": 3, "outcome": "ok"}
+    assert outer.tid == threading.get_ident()
+    # inner's [ts, ts+dur] window nests inside outer's (time containment)
+    inner = ev[0]
+    assert outer.ts < inner.ts and inner.ts + inner.dur < outer.ts + outer.dur
+
+
+def test_span_records_on_error_and_reraises():
+    """A fold that dies mid-span still leaves its span in the timeline,
+    tagged with the exception type, and enclosing spans keep correct
+    extents — the crash-forensics contract."""
+    tr = Tracer(clock=StepClock())
+    with pytest.raises(WorkerCrash, match="boom"):
+        with tr.span("shard.run", "job", shard=0):
+            with tr.span("segment.fold", "job", segment=1):
+                raise WorkerCrash("boom")
+    fold, shard = tr.events()
+    assert fold.name == "segment.fold"
+    assert fold.attrs["error"] == "WorkerCrash"
+    assert shard.name == "shard.run"
+    assert shard.attrs["error"] == "WorkerCrash"
+    assert shard.ts < fold.ts and fold.ts + fold.dur < shard.ts + shard.dur
+
+
+def test_buffer_bound_drops_oldest():
+    tr = Tracer(max_events=4)
+    for i in range(10):
+        tr.instant(f"e{i}")
+    assert [e.name for e in tr.events()] == ["e6", "e7", "e8", "e9"]
+
+
+def test_instants_and_filtered_readout():
+    tr = Tracer()
+    tr.instant("fault.crash", "fault", shard=1)
+    with tr.span("segment.fold", "job"):
+        pass
+    assert [e.name for e in tr.instants()] == ["fault.crash"]
+    assert [e.name for e in tr.spans(cat="job")] == ["segment.fold"]
+    assert tr.spans(name="nope") == []
+
+
+def test_record_explicit_window():
+    tr = Tracer()
+    tr.record("serve.request", 10.0, 10.5, "serve", rid=7)
+    (e,) = tr.events()
+    assert (e.ts, e.dur) == (10.0, 0.5) and e.attrs == {"rid": 7}
+
+
+def test_session_installs_and_restores():
+    base_tr, base_met = obs.tracer(), obs.metrics()
+    with obs.session() as (tr, met):
+        assert obs.tracer() is tr and obs.metrics() is met
+        assert tr.enabled
+    assert obs.tracer() is base_tr and obs.metrics() is base_met
+
+
+# -- metrics ------------------------------------------------------------------
+
+
+def test_counter_exact_under_concurrent_increments():
+    met = Metrics()
+    c = met.counter("hits")
+
+    def hammer():
+        for _ in range(10_000):
+            c.inc()
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 80_000
+
+
+def test_histogram_concurrent_observations_all_land():
+    h = Histogram("lat")
+
+    def hammer(v):
+        for _ in range(5_000):
+            h.observe(v)
+
+    threads = [threading.Thread(target=hammer, args=(0.001 * (i + 1),)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.count == 20_000
+
+
+def test_histogram_quantiles_interpolate_and_clamp():
+    h = Histogram("h", bounds=(1.0, 2.0, 4.0, 8.0))
+    for v in (1.5, 1.5, 1.5, 7.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["min"] == 1.5 and s["max"] == 7.0
+    assert 1.0 <= s["p50"] <= 2.0
+    assert s["p99"] <= 7.0  # clamped to the observed max, not the bucket edge
+    single = Histogram("one")
+    single.observe(0.123)
+    assert single.quantile(0.5) == pytest.approx(0.123)
+
+
+def test_gauge_tracks_last_and_max():
+    g = Metrics().gauge("depth")
+    for v in (1, 5, 2):
+        g.set(v)
+    assert g.value == 2 and g.max == 5
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    met = Metrics()
+    assert met.counter("a") is met.counter("a")
+    with pytest.raises(TypeError, match="Counter"):
+        met.gauge("a")
+    met.counter("b").inc(3)
+    met.histogram("c").observe(0.5)
+    s = met.summary()
+    assert s["counters"] == {"a": 0, "b": 3}
+    assert s["histograms"]["c"]["count"] == 1
+
+
+# -- exporters ----------------------------------------------------------------
+
+
+def _sample_tracer():
+    tr = Tracer(clock=StepClock(0.5))
+    with tr.span("segment.fold", "job", shard=0, segment=0):
+        pass
+    tr.instant("sched.retry", "sched", shard=1)
+    return tr
+
+
+def test_chrome_trace_structure(tmp_path):
+    tr = _sample_tracer()
+    met = Metrics()
+    met.counter("n").inc()
+    path = export.write_chrome_trace(str(tmp_path / "t.json"), tr, metrics=met)
+    doc = json.load(open(path))
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    instants = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert spans[0]["name"] == "segment.fold" and spans[0]["dur"] > 0
+    assert min(e["ts"] for e in spans + instants) == 0.0  # rebased to t=0
+    assert instants[0]["s"] == "t"
+    assert metas and metas[0]["name"] == "thread_name"
+    assert doc["otherData"]["metrics"]["counters"] == {"n": 1}
+
+
+def test_jsonl_roundtrip(tmp_path):
+    tr = _sample_tracer()
+    path = export.write_jsonl(str(tmp_path / "t.jsonl"), tr)
+    lines = [json.loads(l) for l in open(path)]
+    assert len(lines) == len(tr)
+    assert lines[0]["name"] == "segment.fold"
+    assert lines[0]["ts"] == tr.events()[0].ts  # raw clock preserved
+    assert lines[1]["attrs"] == {"shard": 1}
+
+
+def test_summary_tree_groups_by_shard():
+    txt = export.summary_tree(_sample_tracer())
+    assert "shard 0" in txt and "segment.fold" in txt
+    assert "sched.retry×1" in txt
+    rollup = export.phase_rollup(_sample_tracer())
+    assert rollup["shard 0"]["segment.fold"]["count"] == 1
+
+
+# -- instrumented layers ------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def collection():
+    corpus = synthetic.make_corpus(n_docs=N_DOCS, vocab=VOCAB, max_len=24, seed=5)
+    stats = anchors.collection_stats(
+        jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths), vocab=VOCAB,
+        chunk_size=CHUNK,
+    )
+    queries = jnp.asarray(synthetic.make_queries(corpus, n_queries=4, seed=6))
+    docs = (jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths))
+    return stats, queries, docs
+
+
+def _scorers():
+    return [__import__("repro.core.scoring", fromlist=["x"]).get_scorer("bm25")]
+
+
+def _run_job(collection, tmp_path, **kw):
+    stats, queries, docs = collection
+    return cluster.run_sharded_scan_job(
+        queries, docs, _scorers(), k=K, chunk_size=CHUNK, segment_chunks=2,
+        n_shards=N_SHARDS, stats=stats, ckpt_dir=str(tmp_path / "ckpt"), **kw,
+    )
+
+
+def test_sharded_job_emits_spans_per_shard(collection, tmp_path):
+    with obs.session() as (tr, met):
+        _run_job(collection, tmp_path)
+    for shard in range(N_SHARDS):
+        folds = [s for s in tr.spans("segment.fold") if s.attrs["shard"] == shard]
+        assert len(folds) == 2  # 2 segments per shard
+        assert [s.attrs["segment"] for s in folds] == [0, 1]
+        assert any(s.attrs["shard"] == shard for s in tr.spans("shard.run"))
+        assert any(
+            s.attrs["shard"] == shard for s in tr.spans("segment.commit_submit")
+        )
+        assert any(
+            s.attrs["shard"] == shard for s in tr.spans("segment.prefetch_wait")
+        )
+    attempts = tr.spans("shard.attempt")
+    assert {s.attrs["outcome"] for s in attempts} == {"ok"}
+    # checkpoint commits happen on the writer thread, visible as its spans
+    assert all(s.tname == "ckpt-writer" for s in tr.spans("ckpt.save"))
+    assert met.histogram("job.segment_fold_s").count == 2 * N_SHARDS
+    assert met.summary()["histograms"]["ckpt.save_s"]["count"] >= 2 * N_SHARDS
+
+
+def test_crashed_fold_attempt_leaves_error_span_and_fault_marker(
+    collection, tmp_path
+):
+    faults = FaultSchedule(
+        [FaultSpec(kind="crash", shard=1, segment=1, phase="pre_commit")]
+    )
+    with obs.session() as (tr, _):
+        _run_job(collection, tmp_path, faults=faults, max_retries=1)
+    failed = [s for s in tr.spans("shard.attempt") if s.attrs["outcome"] == "failed"]
+    assert len(failed) == 1 and failed[0].attrs["shard"] == 1
+    # the doomed attempt's shard.run span carries the crash type
+    died = [s for s in tr.spans("shard.run") if "error" in s.attrs]
+    assert len(died) == 1 and died[0].attrs["error"] == "WorkerCrash"
+    (crash,) = tr.instants("fault.crash")
+    assert crash.attrs["shard"] == 1 and crash.attrs["segment"] == 1
+    (retry,) = tr.instants("sched.retry")
+    assert retry.attrs["shard"] == 1 and retry.attrs["error"] == "WorkerCrash"
+
+
+def test_scheduler_stats_consistent_under_concurrent_chaos(collection, tmp_path):
+    """SchedulerStats counters are mutated from every worker thread; the
+    final numbers must reconcile exactly with the injected schedule and
+    the trace's own event log."""
+    n_shards = 8
+    stats, queries, docs = collection
+    faults = FaultSchedule(
+        [
+            FaultSpec(kind="crash", shard=s, segment=0, phase="post_commit")
+            for s in range(0, n_shards, 2)
+        ]
+    )
+    with obs.session() as (tr, _):
+        job = cluster.run_sharded_scan_job(
+            queries, docs, _scorers(), k=K, chunk_size=CHUNK, segment_chunks=1,
+            n_shards=n_shards, stats=stats, ckpt_dir=str(tmp_path / "c8"),
+            faults=faults, max_retries=1, max_workers=4,
+        )
+    s = job.scheduler
+    assert s.retries == n_shards // 2 == len(tr.instants("sched.retry"))
+    assert sum(s.attempts) == n_shards + s.retries + s.speculative_launched
+    by_outcome = {}
+    for sp in tr.spans("shard.attempt"):
+        by_outcome[sp.attrs["outcome"]] = by_outcome.get(sp.attrs["outcome"], 0) + 1
+    assert by_outcome.get("failed", 0) == s.retries
+    assert by_outcome.get("ok", 0) == n_shards
+    assert len(tr.instants("sched.steal")) == s.steals
+
+
+# -- byte identity ------------------------------------------------------------
+
+
+def test_traced_run_files_byte_identical_to_untraced(tmp_path):
+    spec = exp_grid.ExperimentSpec(
+        name="obs-id", grids=(exp_grid.GridSpec("bm25"),),
+        n_docs=N_DOCS, n_queries=4, vocab=VOCAB, max_doc_len=24,
+        k=K, chunk_size=CHUNK, segment_chunks=2, n_shards=N_SHARDS,
+    )
+    coll = runner.prepare_collection(spec, seed=3)
+    faults = lambda: FaultSchedule(  # noqa: E731 — fresh per run
+        [FaultSpec(kind="crash", shard=0, segment=0, phase="post_commit")]
+    )
+    plain = runner.run_experiment(
+        spec, out_dir=str(tmp_path / "plain"), seed=3, collection=coll,
+        faults=faults(), max_retries=1,
+    )
+    trace_path = tmp_path / "obs" / "trace.json"
+    traced = runner.run_experiment(
+        spec, out_dir=str(tmp_path / "traced"), seed=3, collection=coll,
+        faults=faults(), max_retries=1, trace_out=str(trace_path),
+    )
+    # tracing observed a faulted, retried run...
+    ob = traced["job"]["obs"]
+    assert ob["n_events"] > 0 and plain["job"]["obs"] is None
+    doc = json.load(open(trace_path))
+    folds = [e for e in doc["traceEvents"] if e["name"] == "segment.fold"]
+    assert {e["args"]["shard"] for e in folds} == set(range(N_SHARDS))
+    assert ob["metrics"]["histograms"]["job.segment_fold_s"]["count"] >= 4
+    assert "shard 0" in ob["phases"]
+    assert trace_path.with_suffix(".jsonl").exists()
+    # ...and never perturbed the artifacts
+    runs = sorted((tmp_path / "plain" / "runs").iterdir())
+    assert runs
+    for p in runs:
+        q = tmp_path / "traced" / "runs" / p.name
+        assert p.read_bytes() == q.read_bytes()
+    # the lifecycle restored the ambient (disabled) instruments
+    assert not obs.tracer().enabled
+
+
+# -- serve histograms ---------------------------------------------------------
+
+
+def test_serve_dispatch_populates_histograms_and_request_spans():
+    corpus = synthetic.make_corpus(n_docs=128, vocab=256, max_len=24, seed=0)
+    session = LexicalSession(
+        corpus.tokens, corpus.lengths, "ql_lm", k=5, chunk_size=64, vocab=256
+    )
+    clock_t = [0.0]
+
+    def clock():
+        clock_t[0] += 0.001
+        return clock_t[0]
+
+    registry = Metrics()
+    service = RetrievalService(
+        {"lexical": session}, max_batch=4, max_delay=0.5, clock=clock,
+        registry=registry,
+    )
+    with obs.session() as (tr, _):
+        queries = synthetic.make_queries(corpus, n_queries=10, seed=1)
+        rids = [service.submit(q, "lexical") for q in queries]
+        results = service.poll()
+        results.update(service.drain())
+    assert sorted(results) == sorted(rids)
+    s = registry.summary()
+    assert s["counters"]["serve.requests"] == 10
+    assert s["counters"]["serve.batches"] == 3  # 4 + 4 + flush(2)
+    bs = s["histograms"]["serve.batch_size"]
+    assert bs["count"] == 3 and bs["max"] == 4.0 and bs["min"] == 2.0
+    for name in ("serve.queue_wait_s", "serve.latency_s"):
+        h = s["histograms"][name]
+        assert h["count"] == 3
+        assert 0 < h["p50"] <= h["p95"] <= h["p99"] <= h["max"]
+    # one enqueue→reply span per request, plus one dispatch span per block
+    reqs = tr.spans("serve.request")
+    assert sorted(e.attrs["rid"] for e in reqs) == sorted(rids)
+    assert all(e.dur > 0 for e in reqs)
+    dispatches = tr.spans("serve.dispatch")
+    assert [d.attrs["n_real"] for d in dispatches] == [4, 4, 2]
+    assert {d.attrs["trigger"] for d in dispatches} == {"size", "flush"}
+
+
+# -- deprecation alias origin (satellite) -------------------------------------
+
+
+def _one_shard_kwargs(collection):
+    stats, queries, docs = collection
+    return dict(
+        queries=queries, docs=docs, scorers=_scorers(), k=K, chunk_size=CHUNK,
+        segment_chunks=2, stats=stats,
+    )
+
+
+def test_legacy_warning_points_at_caller_run_scan_job(collection):
+    kw = _one_shard_kwargs(collection)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with pytest.raises(RuntimeError, match="injected failure"):
+            cluster.run_scan_job(
+                kw["queries"], kw["docs"], kw["scorers"], k=K, chunk_size=CHUNK,
+                segment_chunks=2, stats=kw["stats"], fail_at_segment=0,
+            )
+    (w,) = [w for w in caught if w.category is DeprecationWarning]
+    assert w.filename == __file__  # stacklevel=2: the caller's line, not job.py
+
+
+def test_legacy_warning_points_at_caller_run_sharded(collection):
+    kw = _one_shard_kwargs(collection)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with pytest.raises(RuntimeError, match="injected failure"):
+            cluster.run_sharded_scan_job(
+                kw["queries"], kw["docs"], kw["scorers"], k=K, chunk_size=CHUNK,
+                segment_chunks=2, stats=kw["stats"], n_shards=2,
+                fail_at_segment=0, fail_at_shard=1,
+            )
+    (w,) = [w for w in caught if w.category is DeprecationWarning]
+    assert w.filename == __file__
+
+
+def test_legacy_warning_points_at_caller_run_experiment(tmp_path):
+    """run_experiment converts the legacy kwargs itself instead of
+    forwarding them, so the warning is attributed to the experiment's
+    caller rather than to runner.py's internal job call."""
+    spec = exp_grid.ExperimentSpec(
+        name="obs-dep", grids=(exp_grid.GridSpec("bm25"),),
+        n_docs=N_DOCS, n_queries=4, vocab=VOCAB, max_doc_len=24,
+        k=K, chunk_size=CHUNK, segment_chunks=2, n_shards=2,
+    )
+    coll = runner.prepare_collection(spec, seed=3)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        report = runner.run_experiment(
+            spec, out_dir=str(tmp_path / "dep"), seed=3, collection=coll,
+            fail_at_segment=0, fail_at_shard=0, max_retries=1,
+        )
+    deps = [w for w in caught if w.category is DeprecationWarning]
+    assert deps and all(w.filename == __file__ for w in deps)
+    # the alias reached the job as a real FaultSpec: it fired and was retried
+    assert [f["kind"] for f in report["job"]["faults_fired"]] == ["crash"]
+    assert report["job"]["scheduler"]["retries"] == 1
