@@ -1,0 +1,407 @@
+"""Autotune harness: search TuningConfig knob spaces against real jobs.
+
+This is the *recorder* half of the autotuning subsystem (`repro.tune` is
+the library): each target binds a KnobSpace to an existing measurement
+path — the sharded scan job for the scan knobs, the retrieval service for
+the microbatch triggers — runs the async model-based search, and records
+the winner in the persistent cache under the same shape signature the
+experiment runner's ``--tune`` lookup computes (`tune.scan_shape_sig_for`
+on the same spec object — the round-trip is structural, not string luck).
+
+Two contracts are enforced on every single trial, not just the winner:
+
+* **byte identity** — the trial's merged top-k state (scan) or per-request
+  results (serve) must be byte-identical to a default-config oracle run
+  once up front. Tuning changes speed, never bytes; a config that changes
+  bytes fails its trial AND fails the whole benchmark.
+* **default in the tournament** — the space's base config is candidate #0
+  (see `KnobSpace.candidates`), so the recorded winner is ≥ the default
+  within the measurement session by construction.
+
+    PYTHONPATH=src python -m benchmarks.autotune --budget 8 \
+        --cache results/tune_cache.json --json BENCH_autotune.json
+
+Targets: ``scan_smoke`` (CI-sized scan job, seconds), ``serve``
+(microbatch triggers over a resident lexical session), ``scan_bench``
+(the 8k-doc benchmark collection; minutes on CPU — opt in via
+``--targets``). The flash-attention block knobs (``flash_block_q/k``,
+``decode_block_s``) live in the knob space but have no target here: on a
+CPU host the kernels run in interpret mode, where block-size timings say
+nothing about a compiled backend (see `tune.backend_sig`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from typing import Callable
+
+import numpy as np
+
+from benchmarks import common
+from repro import tune
+from repro.cluster.job import run_sharded_scan_job
+from repro.experiments import grid as exp_grid
+from repro.experiments import runner
+from repro.serve.service import RetrievalService
+from repro.serve.session import LexicalSession
+from repro.tune import Knob, KnobSpace, TuningConfig
+
+SERVE_N_QUERIES = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """One tunable workload: a knob space bound to a measurement closure."""
+
+    name: str
+    space: KnobSpace
+    shape: str
+    backend: str
+    measure: Callable[[TuningConfig], float]  # figure of merit, higher=better
+    meta: dict
+
+
+def _effective_chunk(cfg: TuningConfig, *, n_docs: int, n_shards: int, declared: int) -> int:
+    """The runner's tuned-chunk rule: a chunk knob applies only when it
+    divides the per-shard rows — a knob may be ignored, never fail a job."""
+    if cfg.chunk_size is None:
+        return declared
+    shards = max(1, n_shards)
+    per_shard = n_docs // shards
+    if n_docs % shards == 0 and per_shard % cfg.chunk_size == 0:
+        return cfg.chunk_size
+    return declared
+
+
+def _state_bytes(state) -> bytes:
+    return np.asarray(state.scores).tobytes() + np.asarray(state.ids).tobytes()
+
+
+def _scan_target(
+    name: str,
+    spec: exp_grid.ExperimentSpec,
+    *,
+    chunk_values: tuple,
+    prefetch_values: tuple,
+    repeats: int,
+    seed: int = 0,
+) -> Target:
+    """Bind a scan-knob space to `run_sharded_scan_job` on ``spec``'s
+    geometry (no checkpoint dir: this measures the steady scan, not I/O)."""
+    coll = runner.prepare_collection(spec, seed=seed)
+    queries = np.asarray(coll.queries)
+    docs = (np.asarray(coll.corpus.tokens), np.asarray(coll.corpus.lengths))
+    scorers = spec.scorers()
+    shards = max(1, spec.n_shards)
+    per_shard = spec.n_docs // shards
+
+    def legal(cfg: TuningConfig) -> bool:
+        # only chunks that actually apply: a knob the job would ignore is a
+        # wasted trial re-measuring the declared chunk
+        return cfg.chunk_size is None or (
+            spec.n_docs % shards == 0 and per_shard % cfg.chunk_size == 0
+        )
+
+    space = KnobSpace(
+        kind="scan_job",
+        knobs=(
+            Knob("chunk_size", chunk_values),
+            Knob("prefetch_depth", prefetch_values),
+        ),
+        constraint=legal,
+    )
+
+    def run_job(cfg: TuningConfig):
+        return run_sharded_scan_job(
+            queries,
+            docs,
+            scorers,
+            k=spec.k,
+            chunk_size=_effective_chunk(
+                cfg, n_docs=spec.n_docs, n_shards=shards, declared=spec.chunk_size
+            ),
+            segment_chunks=spec.segment_chunks,
+            n_shards=shards,
+            stats=coll.stats,
+            ckpt_dir=None,
+            use_kernel=spec.use_kernel,
+            tuning=cfg,
+        ).state
+
+    oracle = _state_bytes(run_job(space.base))
+
+    def measure(cfg: TuningConfig) -> float:
+        got = _state_bytes(run_job(cfg))  # doubles as the jit warmup
+        if got != oracle:
+            raise AssertionError(
+                f"byte-identity violated: {cfg.overrides()} changed the "
+                "merged top-k state vs the default-config oracle"
+            )
+        wall = common.timeit(lambda: run_job(cfg), repeats=repeats, warmup=0)
+        return spec.n_docs * len(scorers) / wall  # scored docs/s
+
+    return Target(
+        name=name,
+        space=space,
+        shape=tune.scan_shape_sig_for(spec),
+        backend=tune.backend_sig(use_kernel=spec.use_kernel),
+        measure=measure,
+        meta={
+            "spec": spec.name,
+            "n_docs": spec.n_docs,
+            "n_queries": spec.n_queries,
+            "n_models": len(scorers),
+            "n_shards": shards,
+            "declared_chunk": spec.chunk_size,
+            "score_unit": "docs*models/s",
+        },
+    )
+
+
+def _serve_target(*, repeats: int, seed: int = 0) -> Target:
+    """Bind the microbatch-trigger knobs to a full submit/poll/drain stream
+    over a resident LexicalSession (the C1 serving path)."""
+    spec = exp_grid.get_experiment("smoke")
+    coll = runner.prepare_collection(spec, seed=seed)
+    scorer = spec.scorers()[0]
+    session = LexicalSession(
+        np.asarray(coll.corpus.tokens),
+        np.asarray(coll.corpus.lengths),
+        scorer,
+        k=spec.k,
+        chunk_size=spec.chunk_size,
+        stats=coll.stats,
+        vocab=spec.vocab,
+    )
+    from repro.data import synthetic
+
+    stream = np.asarray(
+        synthetic.make_queries(coll.corpus, n_queries=SERVE_N_QUERIES, max_q_len=4, seed=7)
+    )
+
+    # deadline pinned far out: the sweep measures the *size* trigger (and
+    # the drain tail), not the wall clock of the submit loop
+    base = TuningConfig().replace(serve_max_delay_s=60.0)
+    space = KnobSpace(
+        kind="serve",
+        knobs=(
+            Knob("serve_max_batch", (16, 32, 64, 128)),
+            Knob("serve_min_bucket", (8, 16)),
+        ),
+        base=base,
+    )
+
+    def run_stream(cfg: TuningConfig):
+        service = RetrievalService({session.kind: session}, tuning=cfg)
+        results = {}
+        t0 = time.perf_counter()
+        for row in stream:
+            service.submit(row, session.kind)
+            results.update(service.poll())
+        results.update(service.drain())
+        wall = time.perf_counter() - t0
+        assert len(results) == len(stream), (len(results), len(stream))
+        return results, wall
+
+    def result_bytes(results) -> bytes:
+        # rids are assigned in submit order, so rid order == stream order
+        out = []
+        for rid in sorted(results):
+            out.append(results[rid].scores.tobytes())
+            out.append(results[rid].ids.tobytes())
+        return b"".join(out)
+
+    oracle = result_bytes(run_stream(base)[0])
+
+    def measure(cfg: TuningConfig) -> float:
+        results, _ = run_stream(cfg)  # warmup + byte check
+        got = result_bytes(results)
+        if got != oracle:
+            raise AssertionError(
+                f"byte-identity violated: {cfg.overrides()} changed "
+                "per-request results vs the default-config oracle"
+            )
+        walls = [run_stream(cfg)[1] for _ in range(repeats)]
+        return len(stream) / float(np.median(walls))  # qps
+
+    return Target(
+        name="serve",
+        space=space,
+        shape=tune.serve_shape_sig(
+            n_docs=spec.n_docs, k=spec.k, chunk_size=spec.chunk_size, kind=session.kind
+        ),
+        backend=tune.backend_sig(use_kernel=False),
+        measure=measure,
+        meta={
+            "n_docs": spec.n_docs,
+            "n_stream": len(stream),
+            "scorer": scorer.name,
+            "score_unit": "queries/s",
+        },
+    )
+
+
+def build_target(name: str, *, seed: int = 0) -> Target:
+    if name == "scan_smoke":
+        return _scan_target(
+            name,
+            exp_grid.get_experiment("smoke"),
+            chunk_values=(64, 128, 256),
+            prefetch_values=(1, 2, 4),
+            repeats=3,
+            seed=seed,
+        )
+    if name == "scan_bench":
+        spec = dataclasses.replace(
+            exp_grid.get_experiment("smoke"),
+            name="bench",
+            n_docs=common.N_DOCS,
+            n_queries=32,
+            vocab=common.VOCAB,
+            chunk_size=512,
+            segment_chunks=4,
+        )
+        return _scan_target(
+            name,
+            spec,
+            chunk_values=(256, 512, 1024, 2048),
+            prefetch_values=(1, 2),
+            repeats=2,
+            seed=seed,
+        )
+    if name == "serve":
+        return _serve_target(repeats=3, seed=seed)
+    raise KeyError(f"unknown autotune target {name!r}; have {sorted(TARGETS)}")
+
+
+TARGETS = ("scan_smoke", "serve", "scan_bench")
+DEFAULT_TARGETS = ("scan_smoke", "serve")  # scan_bench is minutes on CPU
+
+
+def tune_target(
+    target: Target,
+    *,
+    budget: int,
+    seed: int = 0,
+    cache_path: str | None = None,
+    log: Callable[[str], None] | None = None,
+) -> dict:
+    """Search one target, enforce the contracts, record the winner, and
+    verify the write→reload→hit round trip. Returns the report block."""
+    result = tune.run_search(
+        target.space, target.measure, budget=budget, seed=seed, log=log
+    )
+    bad = [t for t in result.trials if t.error]
+    if bad:
+        raise RuntimeError(
+            f"{target.name}: {len(bad)} trial(s) failed "
+            f"(first: {bad[0].config.overrides()} -> {bad[0].error})"
+        )
+    assert result.best.score >= result.default.score, (
+        result.best.score,
+        result.default.score,
+    )
+
+    cache = tune.TuneCache(cache_path)
+    key = cache.put(
+        kind=target.space.kind,
+        shape=target.shape,
+        config=result.best.config,
+        score=result.best.score,
+        backend=target.backend,
+        meta={"target": target.name, "speedup_x": result.speedup_x, **target.meta},
+    )
+    # the round trip the runner's --tune depends on: written -> found -> same
+    reloaded, hit = cache.get(
+        kind=target.space.kind, shape=target.shape, backend=target.backend
+    )
+    assert hit, f"{target.name}: winner not found under its own key {key}"
+    assert reloaded.config_hash() == result.best.config.config_hash(), key
+
+    block = result.describe()
+    block.update(
+        shape=target.shape,
+        backend=target.backend,
+        cache_key=key,
+        cache_hit_roundtrip=True,
+        byte_identity=True,  # enforced per trial; any violation raised above
+        meta=target.meta,
+    )
+    return block
+
+
+def autotune(
+    *,
+    budget: int = 8,
+    targets=DEFAULT_TARGETS,
+    cache_path: str | None = None,
+    seed: int = 0,
+    log: Callable[[str], None] | None = None,
+) -> dict:
+    report = {}
+    for name in targets:
+        target = build_target(name, seed=seed)
+        report[name] = tune_target(
+            target, budget=budget, seed=seed, cache_path=cache_path, log=log
+        )
+    return {
+        "benchmark": "autotune",
+        "budget": budget,
+        "cache": tune.cache.cache_path(cache_path),
+        "targets": report,
+    }
+
+
+def run(rows: list) -> None:
+    """benchmarks.run entry point: tiny-budget pass over the fast targets."""
+    payload = autotune(budget=6, targets=DEFAULT_TARGETS)
+    common.write_bench_json(payload, "BENCH_autotune.json")
+    for name, block in payload["targets"].items():
+        best = block["best"]["score"]
+        rows.append(
+            (
+                f"autotune_{name}",
+                1e6 / best if best > 0 else float("inf"),
+                f"speedup={block['speedup_x']:.2f}x "
+                f"best={block['best']['overrides'] or 'default'}",
+            )
+        )
+        assert block["speedup_x"] >= 1.0, (name, block["speedup_x"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--budget", type=int, default=8, help="trials per target")
+    ap.add_argument("--targets", nargs="+", default=list(DEFAULT_TARGETS),
+                    choices=list(TARGETS))
+    ap.add_argument("--cache", default=None,
+                    help="winner-cache path (default: $REPRO_TUNE_CACHE or "
+                         f"{tune.cache.DEFAULT_PATH})")
+    ap.add_argument("--json", default="BENCH_autotune.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    payload = autotune(
+        budget=args.budget,
+        targets=tuple(args.targets),
+        cache_path=args.cache,
+        seed=args.seed,
+        log=lambda m: print(m, file=sys.stderr),
+    )
+    path = common.write_bench_json(payload, args.json)
+    for name, block in payload["targets"].items():
+        print(
+            f"{name}: default {block['default']['score']:.1f} -> "
+            f"best {block['best']['score']:.1f} "
+            f"({block['speedup_x']:.2f}x) "
+            f"overrides={block['best']['overrides'] or '{}'} "
+            f"[{block['cache_key']}]"
+        )
+    print(f"wrote {path}; winners cached in {payload['cache']}")
+
+
+if __name__ == "__main__":
+    main()

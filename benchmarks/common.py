@@ -12,6 +12,7 @@ import numpy as np
 from repro import obs
 from repro.core import anchors, invindex, scoring
 from repro.data import synthetic
+from repro.tune import config as tune_config
 
 VOCAB = 8192
 N_DOCS = 8192
@@ -46,9 +47,12 @@ def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
 def write_bench_json(payload: dict, path: str) -> str:
     """Persist a BENCH_*.json with the measurement-provenance block stamped
     (host, backend, jax version, device count) — numbers from different
-    machines/backends must be distinguishable in the perf trajectory."""
+    machines/backends must be distinguishable in the perf trajectory. The
+    active TuningConfig's hash/source rides along for the same reason: a
+    number is only comparable to another measured under the same knobs."""
     payload = dict(payload)
     payload.setdefault("provenance", obs.provenance())
+    payload.setdefault("tuning", tune_config.provenance())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

@@ -23,6 +23,7 @@ MODULES = (
     "experiments_amortization",
     "sharded_scan",
     "pipeline_scan",
+    "autotune",
 )
 
 

@@ -16,6 +16,15 @@ rides along as ``grid_curve`` (the model-axis amortization itself is
 devices share few physical cores its wall-clock is advisory — bit-identity
 is still asserted at every point.
 
+A previous recording showed *anti*-scaling at 4 shards × 1 model (254k
+docs/s vs 397k at 2 shards) on a 2-core host: the executor staged segments
+onto all 4 shard home devices while only 2 workers drove them, so half the
+host→device transfers were paid for shards that then re-sliced on a
+different device anyway. `run_sharded_scan_job` now trims its device
+round-robin to the worker pool (and the cross-shard stager follows), so a
+thin host stages only what it can drive; this bench needs no workaround —
+it passes the per-point device list and lets the job trim.
+
 Runs in a subprocess because the 4-virtual-device XLA flag must be set
 before JAX initializes (the benchmark harness process keeps its single real
 device, same discipline as tests/test_system.py). Writes

@@ -59,6 +59,7 @@ artifact:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
@@ -76,6 +77,8 @@ from repro import checkpoint as ckpt
 from repro import obs
 from repro.core import pipeline, topk
 from repro.core.scoring import CollectionStats, Scorer
+from repro.tune import config as tune_config
+from repro.tune.config import TuningConfig
 
 from repro.cluster.faults import FaultSchedule, ShardCancelled, WorkerCrash
 from repro.cluster.mapreduce import reduce_states, segment_fold
@@ -155,6 +158,17 @@ def _job_fingerprint(
 _STREAM_ENDED = object()
 
 
+def _chain_first(first, rest):
+    """Prepend an already-staged segment to a prefetch stream, keeping the
+    stream's close() semantics (the consumer's ``finally`` closes us, we
+    close the underlying prefetch iterator and its worker thread)."""
+    try:
+        yield first
+        yield from rest
+    finally:
+        rest.close()
+
+
 def _write_json(path: str, payload: dict) -> None:
     tmp = os.path.join(os.path.dirname(path), ".tmp-" + os.path.basename(path))
     with open(tmp, "w") as f:
@@ -185,7 +199,7 @@ def run_scan_job(
     stats: CollectionStats | None = None,
     ckpt_dir: str | None = None,
     resume: bool = True,
-    keep_checkpoints: int = 2,
+    keep_checkpoints: int | None = None,
     fail_at_segment: int | None = None,
     shard: int = 0,
     n_shards: int = 1,
@@ -193,10 +207,13 @@ def run_scan_job(
     use_kernel: bool = False,
     device: jax.Device | None = None,
     pipelined: bool = True,
-    prefetch_depth: int = 2,
+    prefetch_depth: int | None = None,
     faults: FaultSchedule | None = None,
     attempt: int = 0,
     cancel: threading.Event | None = None,
+    tuning: TuningConfig | None = None,
+    first_segment: Any | None = None,
+    writer: ckpt.AsyncCheckpointer | None = None,
 ) -> ScanJobResult:
     """Run (or resume) one shard's checkpointed multi-scorer scan — the map
     task of the sharded job, and the whole job when the plan has one shard.
@@ -223,8 +240,25 @@ def run_scan_job(
     run raises :class:`ShardCancelled` at the next segment boundary.
     ``fail_at_segment`` is a deprecated alias for one transient post-commit
     crash at exactly that segment.
+
+    ``tuning`` picks the execution-only knobs (explicit arg > the
+    process-active :class:`repro.tune.TuningConfig`): ``prefetch_depth`` and
+    ``keep_checkpoints`` default from it when passed as ``None``, and the
+    kernel block geometry flows into the shared fold. ``first_segment`` is
+    an already-staged (device-resident) copy of segment 0's docs — the
+    cross-shard prefetch handoff from :func:`run_sharded_scan_job` — used
+    only on a fresh pipelined start (a resumed job ignores it; the staged
+    rows were already folded). ``writer`` is an externally-owned
+    :class:`checkpoint.AsyncCheckpointer` to reuse across shards: the job
+    drains it at the usual barriers but never closes it; ownership (and
+    discarding it if this attempt fails) stays with the caller.
     """
     scorers = tuple(scorers)
+    cfg = tune_config.resolve(tuning)
+    if keep_checkpoints is None:
+        keep_checkpoints = cfg.keep_checkpoints
+    if prefetch_depth is None:
+        prefetch_depth = cfg.prefetch_depth
     if fail_at_segment is not None:
         if faults is not None:
             raise ValueError(
@@ -289,7 +323,9 @@ def run_scan_job(
             os.remove(stale)
 
     # the one compiled program every shard/segment/job of this config shares
-    fold = segment_fold(scorers, k=k, chunk_size=chunk_size, use_kernel=use_kernel)
+    fold = segment_fold(
+        scorers, k=k, chunk_size=chunk_size, use_kernel=use_kernel, tuning=cfg
+    )
 
     def progress(done: int) -> dict:
         return {
@@ -321,16 +357,31 @@ def run_scan_job(
     tr = obs.tracer()
     met = obs.metrics()
     if pipelined:
-        seg_stream = pipeline.prefetch_segments(
-            docs, segs[start_seg:], device=device, depth=prefetch_depth,
-            cancel=cancel,
-        )
+        stream_segs = segs[start_seg:]
+        if first_segment is not None and start_seg == 0 and stream_segs:
+            # cross-shard prefetch handoff: segment 0 was staged on this
+            # device while the previous shard was still folding — start the
+            # background stream at segment 1
+            rest = pipeline.prefetch_segments(
+                docs, stream_segs[1:], device=device, depth=prefetch_depth,
+                cancel=cancel,
+            )
+            seg_stream = _chain_first(first_segment, rest)
+        else:
+            seg_stream = pipeline.prefetch_segments(
+                docs, stream_segs, device=device, depth=prefetch_depth,
+                cancel=cancel,
+            )
     else:
         seg_stream = (
             jax.tree.map(lambda x: x[a:b], docs) for a, b in segs[start_seg:]
         )
     seg_iter = iter(seg_stream)
-    writer = ckpt.AsyncCheckpointer() if (pipelined and ckpt_dir) else None
+    writer_owned = writer is None
+    if not (pipelined and ckpt_dir):
+        writer = None  # the sync / uncheckpointed paths never touch a writer
+    elif writer is None:
+        writer = ckpt.AsyncCheckpointer()
     shard_span = tr.span(
         "shard.run", "job", shard=shard, attempt=attempt,
         resumed_from=start_seg, n_segments=len(segs),
@@ -410,16 +461,18 @@ def run_scan_job(
                     writer.drain()
         except BaseException:
             if writer is not None:
-                try:
-                    writer.close()
-                except BaseException:
-                    pass  # the in-flight error (e.g. the injected kill) wins
+                # an external writer is only drained (no in-flight commit may
+                # outlive this attempt); closing/discarding it is its owner's
+                # call. The in-flight error (e.g. the injected kill) wins
+                # over any writer error either way.
+                with contextlib.suppress(BaseException):
+                    writer.close() if writer_owned else writer.drain()
                 writer = None
             raise
         finally:
             if pipelined:
                 seg_stream.close()  # stop the prefetch thread on any exit path
-            if writer is not None:
+            if writer is not None and writer_owned:
                 writer.close()
     if ckpt_dir and start_seg == len(segs):
         _write_progress(ckpt_dir, progress(len(segs)))  # idempotent re-run
@@ -480,6 +533,122 @@ def _seed_spec_dir(primary: str, spec_dir: str) -> None:
         os.makedirs(spec_dir, exist_ok=True)
 
 
+class _ShardStager:
+    """Cross-shard prefetch: stage the *next* queued shard's first segment
+    while the current one is still folding.
+
+    `pipeline.prefetch_segments` overlaps transfers *within* a shard but
+    goes cold at shard boundaries — a worker picking up its next shard
+    stalls on segment 0's host slice + device transfer. A worker entering a
+    shard therefore asks the stager to start staging the lowest-index
+    still-queued shard's first segment onto that shard's home device, on a
+    background thread; whichever worker later claims that shard collects
+    the staged segment with :meth:`take` and hands it to
+    :func:`run_scan_job` as ``first_segment``.
+
+    Purely an optimization, never a correctness dependency: a device
+    mismatch (the shard was stolen onto another worker's device), a staging
+    error, or a claim that raced the staging thread all degrade to ``None``
+    — the job re-slices segment 0 itself, byte-identical either way.
+    """
+
+    def __init__(self, docs, plan: ShardPlan, devices, seg_rows: int):
+        self._docs = docs
+        self._plan = plan
+        self._devices = list(devices)
+        self._seg_rows = seg_rows
+        self._lock = threading.Lock()
+        self._pending = set(range(plan.n_shards))  # not yet claimed by a worker
+        self._staged: dict[int, tuple[threading.Thread, list, Any]] = {}
+
+    def take(self, index: int, device):
+        """Claim shard ``index``; return its staged first segment if it was
+        prefetched onto ``device``, else None."""
+        with self._lock:
+            self._pending.discard(index)
+            entry = self._staged.pop(index, None)
+        if entry is None:
+            return None
+        thread, box, dev = entry
+        thread.join()
+        if dev is not device or not box:
+            return None
+        return box[0]
+
+    def stage_next(self) -> None:
+        """Kick off staging for the lowest-index queued, un-staged shard
+        (onto its round-robin home device). No-op when nothing is queued."""
+        with self._lock:
+            todo = sorted(i for i in self._pending if i not in self._staged)
+            if not todo:
+                return
+            idx = todo[0]
+            shard = self._plan.shards[idx]
+            dev = self._devices[idx % len(self._devices)]
+            box: list = []
+
+            def _stage():
+                try:
+                    with obs.tracer().span(
+                        "prefetch.stage_shard", "pipeline", shard=idx
+                    ):
+                        a = shard.start
+                        b = min(shard.stop, a + self._seg_rows)
+                        seg = jax.tree.map(lambda x: x[a:b], self._docs)
+                        box.append(jax.device_put(seg, dev))
+                except BaseException:  # noqa: BLE001 — a miss, not a failure
+                    box.clear()
+
+            t = threading.Thread(target=_stage, name=f"shard-stage-{idx}", daemon=True)
+            self._staged[idx] = (t, box, dev)
+        t.start()
+
+
+class _WriterPool:
+    """Per-worker `checkpoint.AsyncCheckpointer` reuse for a sharded job.
+
+    Spinning up a writer thread per shard attempt is pure overhead when one
+    worker runs many shards back to back; the pool hands each worker thread
+    one long-lived writer (``threading.local``) that successive
+    `run_scan_job` calls drain-but-don't-close. A writer error poisons the
+    writer permanently (by design — see `AsyncCheckpointer`), so a failed
+    attempt must :meth:`discard` its worker's writer rather than return it.
+    """
+
+    def __init__(self):
+        self._local = threading.local()
+        self._all: list = []
+        self._lock = threading.Lock()
+
+    def get(self) -> ckpt.AsyncCheckpointer:
+        w = getattr(self._local, "writer", None)
+        if w is None:
+            w = ckpt.AsyncCheckpointer()
+            self._local.writer = w
+            with self._lock:
+                self._all.append(w)
+        return w
+
+    def discard(self) -> None:
+        """Drop (and close) the calling worker's writer — it may be poisoned."""
+        w = getattr(self._local, "writer", None)
+        if w is None:
+            return
+        self._local.writer = None
+        with self._lock:
+            if w in self._all:
+                self._all.remove(w)
+        with contextlib.suppress(BaseException):
+            w.close()
+
+    def close_all(self) -> None:
+        with self._lock:
+            writers, self._all = self._all, []
+        for w in writers:
+            with contextlib.suppress(BaseException):
+                w.close()
+
+
 def run_sharded_scan_job(
     queries: Any,
     docs: Any,
@@ -493,7 +662,7 @@ def run_sharded_scan_job(
     stats: CollectionStats | None = None,
     ckpt_dir: str | None = None,
     resume: bool = True,
-    keep_checkpoints: int = 2,
+    keep_checkpoints: int | None = None,
     fail_at_segment: int | None = None,
     fail_at_shard: int = 0,
     use_kernel: bool = False,
@@ -502,9 +671,10 @@ def run_sharded_scan_job(
     max_workers: int | None = None,
     faults: FaultSchedule | None = None,
     max_retries: int = 0,
-    backoff_base: float = 0.1,
-    backoff_cap: float = 5.0,
+    backoff_base: float | None = None,
+    backoff_cap: float | None = None,
     speculative: bool = False,
+    tuning: TuningConfig | None = None,
 ) -> ShardedScanResult:
     """Run (or resume) a full sharded scan job: map every shard, reduce once.
 
@@ -545,6 +715,16 @@ def run_sharded_scan_job(
     value-deterministic and applied in plan order whatever order shards
     finish — so run files written from it satisfy the same fingerprint
     contract as the single-host job.
+
+    ``tuning`` (explicit arg > process-active config) supplies defaults for
+    ``max_workers``/``keep_checkpoints``/``backoff_base``/``backoff_cap``
+    when those are ``None``, flows the kernel block geometry into the shared
+    fold, and gates two boundary optimizations: ``cross_shard_prefetch``
+    (stage the next queued shard's first segment while the current shard
+    folds — see :class:`_ShardStager`) and ``writer_reuse`` (one async
+    checkpoint writer per worker across shards, only engaged when no fault
+    injection or speculation could poison a shared writer). All of it is
+    execution geometry: byte-identical artifacts under every config.
     """
     if fail_at_segment is not None:
         warnings.warn(
@@ -559,6 +739,11 @@ def run_sharded_scan_job(
         else:
             faults.add(legacy.specs[0])
 
+    cfg = tune_config.resolve(tuning)
+    if backoff_base is None:
+        backoff_base = cfg.backoff_base
+    if backoff_cap is None:
+        backoff_cap = cfg.backoff_cap
     n_rows = jax.tree.leaves(docs)[0].shape[0]
     if plan is None:
         plan = plan_shards(n_rows, n_shards=n_shards, chunk_size=chunk_size)
@@ -584,6 +769,20 @@ def run_sharded_scan_job(
             {"plan": plan.describe(), "scorers": [s.name for s in scorers], "k": k},
         )
 
+    workers = 1
+    if pipelined:
+        workers = max_workers if max_workers else (
+            cfg.max_workers or (len(devices) if devices else 1)
+        )
+        workers = max(1, min(workers, plan.n_shards))
+        if devices and len(devices) > workers:
+            # only `workers` threads ever execute, and each folds on
+            # devices[worker % len(devices)] — staging queries/stats (and
+            # prefetching shards) onto devices no worker drives is pure
+            # waste (the anti-scaling seen on thin hosts: 4 shards staged
+            # to 4 devices with 2 workers ran *slower* than 2 shards)
+            devices = list(devices)[:workers]
+
     # stage the replicated inputs once per assigned device, outside the
     # worker pool: shards on the same device share the transfer, and the
     # in-job device_put then short-circuits instead of re-copying while
@@ -594,6 +793,25 @@ def run_sharded_scan_job(
             dev = devices[shard.index % len(devices)]
             if dev not in staged:
                 staged[dev] = jax.device_put((queries, stats), dev)
+
+    # cross-shard prefetch: stage the next queued shard's first segment
+    # while the current one folds (worthless — and unconsumed — for the
+    # one-shard plan or the eager-staging sequential path)
+    stager = None
+    if pipelined and cfg.cross_shard_prefetch and devices and plan.n_shards > 1:
+        stager = _ShardStager(
+            docs, plan, devices, seg_rows=chunk_size * segment_chunks
+        )
+
+    # one checkpoint writer per worker across its shards, only when no
+    # speculation/fault-injection could leave a poisoned or racing writer
+    # shared between attempts
+    writer_pool = None
+    if (
+        pipelined and ckpt_dir and cfg.writer_reuse
+        and faults is None and not speculative
+    ):
+        writer_pool = _WriterPool()
 
     def run_attempt(
         shard, *, worker=None, attempt=0, cancel=None, speculative=False
@@ -611,29 +829,42 @@ def run_sharded_scan_job(
         if speculative and sdir is not None:
             primary, sdir = sdir, spec_ckpt_dir(sdir)
             _seed_spec_dir(primary, sdir)
-        return run_scan_job(
-            q,
-            shard.take(docs),
-            scorers,
-            k=k,
-            chunk_size=chunk_size,
-            segment_chunks=segment_chunks,
-            stats=st,
-            ckpt_dir=sdir,
-            # retries and speculative clones always resume: the last
-            # committed segment checkpoint is the unit of re-execution
-            resume=resume or attempt > 0 or speculative,
-            keep_checkpoints=keep_checkpoints,
-            shard=shard.index,
-            n_shards=plan.n_shards,
-            doc_id_offset=shard.doc_id_offset,
-            use_kernel=use_kernel,
-            device=device,
-            pipelined=pipelined,
-            faults=faults,
-            attempt=attempt,
-            cancel=cancel,
-        )
+        first_seg = None
+        if stager is not None and not speculative:
+            first_seg = stager.take(shard.index, device)
+            stager.stage_next()  # overlap the *next* shard with this fold
+        ext_writer = writer_pool.get() if writer_pool is not None else None
+        try:
+            return run_scan_job(
+                q,
+                shard.take(docs),
+                scorers,
+                k=k,
+                chunk_size=chunk_size,
+                segment_chunks=segment_chunks,
+                stats=st,
+                ckpt_dir=sdir,
+                # retries and speculative clones always resume: the last
+                # committed segment checkpoint is the unit of re-execution
+                resume=resume or attempt > 0 or speculative,
+                keep_checkpoints=keep_checkpoints,
+                shard=shard.index,
+                n_shards=plan.n_shards,
+                doc_id_offset=shard.doc_id_offset,
+                use_kernel=use_kernel,
+                device=device,
+                pipelined=pipelined,
+                faults=faults,
+                attempt=attempt,
+                cancel=cancel,
+                tuning=cfg,
+                first_segment=first_seg,
+                writer=ext_writer,
+            )
+        except BaseException:
+            if writer_pool is not None:
+                writer_pool.discard()  # a failed attempt may have poisoned it
+            raise
 
     def finalize_spec(index: int, won: bool) -> None:
         # both attempts have stopped (scheduler invariant), so nothing is
@@ -647,11 +878,6 @@ def run_sharded_scan_job(
             ckpt.replace_dir(sdir, primary)
         else:
             shutil.rmtree(sdir, ignore_errors=True)
-
-    workers = 1
-    if pipelined:
-        workers = max_workers if max_workers else (len(devices) if devices else 1)
-        workers = max(1, min(workers, plan.n_shards))
 
     if not pipelined:
         # the synchronous reference executor: plan order, one attempt in
@@ -701,7 +927,11 @@ def run_sharded_scan_job(
             faults=faults,
             finalize_spec=finalize_spec if speculative else None,
         )
-        results, stats_out = sched.run()
+        try:
+            results, stats_out = sched.run()
+        finally:
+            if writer_pool is not None:
+                writer_pool.close_all()
 
     states = [r.state for r in results]
     if devices:

@@ -37,6 +37,8 @@ from jax.experimental.shard_map import shard_map
 from repro import compat
 from repro.core import scan, topk
 from repro.core.scoring import CollectionStats, Scorer
+from repro.tune import config as tune_config
+from repro.tune.config import TuningConfig
 
 from repro.cluster.plan import ShardPlan, mesh_scan_axes
 
@@ -52,6 +54,7 @@ def map_shard(
     doc_id_offset: jax.Array | int = 0,
     init_state: topk.TopKState | None = None,
     use_kernel: bool = False,
+    tuning: TuningConfig | None = None,
 ) -> topk.TopKState:
     """The map task: fold one shard into a stacked ``[n_models, n_q, k]`` state.
 
@@ -59,13 +62,15 @@ def map_shard(
     and serve sessions all dispatch the same fold, so "works under sharding"
     is one property proven once. Dense single-model kernel scans route
     through `scan.search_local` (the fused dense kernel has no grid axis) and
-    are re-stacked to the grid shape.
+    are re-stacked to the grid shape. ``tuning`` picks kernel block geometry
+    (byte-identical under any config; see `repro.tune`).
     """
     scorers = tuple(scorers)
     if use_kernel and len(scorers) == 1 and scorers[0].kind == "dense":
         flat = scan.search_local(
             queries, shard_docs, scorers[0], k=k, chunk_size=chunk_size,
             stats=stats, doc_id_offset=doc_id_offset, use_kernel=True,
+            tuning=tuning,
         )
         state = topk.TopKState(scores=flat.scores[None], ids=flat.ids[None])
         return state if init_state is None else topk.merge(init_state, state)
@@ -79,6 +84,7 @@ def map_shard(
         doc_id_offset=doc_id_offset,
         init_state=init_state,
         use_kernel=use_kernel,
+        tuning=tuning,
     )
 
 
@@ -142,7 +148,8 @@ class _SharedFold:
 
 
 def segment_fold(
-    scorers: Sequence[Scorer], *, k: int, chunk_size: int, use_kernel: bool = False
+    scorers: Sequence[Scorer], *, k: int, chunk_size: int, use_kernel: bool = False,
+    tuning: TuningConfig | None = None,
 ) -> _SharedFold:
     """The one compiled per-segment fold all shards/segments/jobs share.
 
@@ -155,9 +162,21 @@ def segment_fold(
     with the same grid share the compile. All args must live on one device —
     callers pin ``state``/``queries``/``stats``/segments to the shard's
     device (``offset`` may stay an uncommitted scalar; it follows).
+
+    ``tuning`` is resolved *here*, at fold-build time (drivers resolve on
+    their own thread; worker threads get the captured config), and the
+    kernel-shaping knobs join the cache key via
+    :meth:`TuningConfig.fold_key` — two tunings that would trace different
+    Pallas programs can never alias one cache entry. Host folds ignore the
+    block knobs, so their key component is empty and all tunings share the
+    one host program.
     """
     scorers = tuple(scorers)
-    key = (_scorer_key(scorers), k, chunk_size, bool(use_kernel))
+    cfg = tune_config.resolve(tuning)
+    key = (
+        _scorer_key(scorers), k, chunk_size, bool(use_kernel),
+        cfg.fold_key(bool(use_kernel)),
+    )
     with _FOLD_CACHE_LOCK:
         fold = _FOLD_CACHE.get(key)
         if fold is None:
@@ -174,6 +193,7 @@ def segment_fold(
                     doc_id_offset=offset,
                     init_state=state,
                     use_kernel=use_kernel,
+                    tuning=cfg,
                 )
 
             fold = _fifo_insert(
@@ -212,6 +232,7 @@ def scan_shards(
     stats: CollectionStats | None = None,
     use_kernel: bool = False,
     devices: Sequence[jax.Device] | None = None,
+    tuning: TuningConfig | None = None,
 ) -> topk.TopKState:
     """Uncheckpointed host-driven sharded scan: map every shard, reduce once.
 
@@ -230,7 +251,8 @@ def scan_shards(
     scorers = tuple(scorers)
     n_q = jax.tree.leaves(queries)[0].shape[0]
     fold = segment_fold(
-        scorers, k=k, chunk_size=plan.chunk_size, use_kernel=use_kernel
+        scorers, k=k, chunk_size=plan.chunk_size, use_kernel=use_kernel,
+        tuning=tuning,
     )
     state_init = topk.init_host(k, (len(scorers), n_q))
     states = []
@@ -273,6 +295,7 @@ def search_mesh(
     stats: CollectionStats | None = None,
     axis_names: tuple[str, ...] | None = None,
     use_kernel: bool = False,
+    tuning: TuningConfig | None = None,
 ):
     """Full MIREX job as one XLA program: ``shard_map`` over the mesh.
 
@@ -292,6 +315,7 @@ def search_mesh(
     scorers = (scorers,) if isinstance(scorers, Scorer) else tuple(scorers)
     if axis_names is None:
         axis_names = mesh_scan_axes(mesh)
+    cfg = tune_config.resolve(tuning)
     n_docs_total = jax.tree.leaves(docs)[0].shape[0]
     cache_key = (
         mesh,
@@ -300,6 +324,7 @@ def search_mesh(
         k,
         chunk_size,
         bool(use_kernel),
+        cfg.fold_key(bool(use_kernel)),
         n_docs_total,
         jax.tree.structure(queries),
         jax.tree.structure(docs),
@@ -335,6 +360,7 @@ def search_mesh(
             stats=stats,
             doc_id_offset=idx * per_shard,
             use_kernel=use_kernel,
+            tuning=cfg,
         )
         return topk.merge_across_lex(state, axis_names)
 

@@ -43,6 +43,8 @@ from typing import Any, Callable
 from repro import obs
 from repro.cluster.faults import FaultSchedule, ShardCancelled
 from repro.cluster.plan import ShardPlan
+from repro.tune import config as tune_config
+from repro.tune.config import TuningConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,22 +101,24 @@ class ShardScheduler:
         *,
         n_workers: int,
         max_retries: int = 0,
-        backoff_base: float = 0.1,
-        backoff_cap: float = 5.0,
+        backoff_base: float | None = None,
+        backoff_cap: float | None = None,
         speculative: bool = False,
         faults: FaultSchedule | None = None,
         finalize_spec: Callable[[int, bool], None] | None = None,
+        tuning: TuningConfig | None = None,
     ):
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        cfg = tune_config.resolve(tuning)
         self.plan = plan
         self.run_attempt = run_attempt
         self.n_workers = n_workers
         self.max_retries = max_retries
-        self.backoff_base = backoff_base
-        self.backoff_cap = backoff_cap
+        self.backoff_base = cfg.backoff_base if backoff_base is None else backoff_base
+        self.backoff_cap = cfg.backoff_cap if backoff_cap is None else backoff_cap
         self.speculative = speculative
         self.faults = faults
         self.finalize_spec = finalize_spec

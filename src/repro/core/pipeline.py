@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.tune import config as tune_config
 
 S = TypeVar("S")
 
@@ -79,7 +80,7 @@ def prefetch_segments(
     segments: Sequence[tuple[int, int]],
     *,
     device=None,
-    depth: int = 2,
+    depth: int | None = None,
     cancel: threading.Event | None = None,
 ) -> Iterator[Pytree]:
     """Double-buffered host→device segment streaming for pipelined folds.
@@ -88,9 +89,10 @@ def prefetch_segments(
     ``device_put``-ing on a background thread so that while segment *s*
     folds on the device, segment *s+1*'s transfer is already in flight —
     transfer hides under compute instead of serializing with it. ``depth``
-    bounds the number of staged segments (2 = classic double buffering), so
-    device memory holds at most ``depth`` segments of corpus at a time
-    instead of a shard's whole slice.
+    bounds the number of staged segments (2 = classic double buffering;
+    ``None`` = the active :class:`repro.tune.TuningConfig`'s
+    ``prefetch_depth``), so device memory holds at most ``depth`` segments
+    of corpus at a time instead of a shard's whole slice.
 
     ``device=None`` skips the placement (slices stay wherever ``data``
     lives) but keeps the background slicing overlap. The iterator may be
@@ -101,6 +103,8 @@ def prefetch_segments(
     further segments and the iterator end early instead of filling device
     memory with transfers nobody will fold.
     """
+    if depth is None:
+        depth = tune_config.resolve(None).prefetch_depth
     if depth < 1:
         raise ValueError(f"prefetch depth must be >= 1, got {depth}")
     segments = list(segments)

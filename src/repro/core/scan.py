@@ -30,6 +30,8 @@ from jax.sharding import Mesh
 
 from repro.core import pipeline, scoring, topk
 from repro.core.scoring import CollectionStats, Scorer
+from repro.tune import config as tune_config
+from repro.tune.config import TuningConfig
 
 
 def _check_chunking(docs: Any, chunk_size: int) -> None:
@@ -57,6 +59,7 @@ def search_local(
     stats: CollectionStats | None = None,
     doc_id_offset: jax.Array | int = 0,
     use_kernel: bool = False,
+    tuning: TuningConfig | None = None,
 ) -> topk.TopKState:
     """Scan a local corpus shard; return top-k (global doc ids) per query.
 
@@ -66,19 +69,25 @@ def search_local(
 
     ``use_kernel`` dispatches to the fused Pallas path for *both* kinds:
     the dense score+top-k kernel, or the lexical scan kernel (shared
-    on-chip tf + scorer epilogue + resident top-k).
+    on-chip tf + scorer epilogue + resident top-k). ``tuning`` (explicit or
+    the process-active config) picks the kernel block geometry — block size
+    only regroups the combiner fold, so results stay byte-identical.
     """
     _check_chunking(docs, chunk_size)
     if use_kernel:
+        cfg = tune_config.resolve(tuning)
         if scorer.kind == "lexical":
             state = search_local_multi(
                 queries, docs, (scorer,), k=k, chunk_size=chunk_size, stats=stats,
-                doc_id_offset=doc_id_offset, use_kernel=True,
+                doc_id_offset=doc_id_offset, use_kernel=True, tuning=cfg,
             )
             return topk.TopKState(scores=state.scores[0], ids=state.ids[0])
         from repro.kernels import ops  # local import: kernels are optional
 
-        scores, ids = ops.score_topk(queries, docs, k=k, block_d=chunk_size)
+        n_rows = jax.tree.leaves(docs)[0].shape[0]
+        scores, ids = ops.score_topk(
+            queries, docs, k=k, block_d=cfg.dense_block(chunk_size, n_rows)
+        )
         return topk.TopKState(scores=scores, ids=_offset_ids(ids, doc_id_offset))
 
     n_q = jax.tree.leaves(queries)[0].shape[0]
@@ -106,6 +115,7 @@ def search_local_multi(
     doc_id_offset: jax.Array | int = 0,
     init_state: topk.TopKState | None = None,
     use_kernel: bool = False,
+    tuning: TuningConfig | None = None,
 ) -> topk.TopKState:
     """Scan a corpus shard once, scoring a whole *grid* of models.
 
@@ -152,10 +162,13 @@ def search_local_multi(
             raise ValueError("use_kernel multi-scan supports lexical grids only")
         from repro.kernels import ops  # local import: kernels are optional
 
+        cfg = tune_config.resolve(tuning)
         d_tokens, d_len = docs
         modes, weights, ab = scoring.lexical_epilogues(scorers, queries, stats)
         scores, ids = ops.lexical_scan_topk(
-            queries, weights, ab, d_tokens, d_len, modes=modes, k=k, block_d=chunk_size
+            queries, weights, ab, d_tokens, d_len, modes=modes, k=k,
+            block_d=cfg.lex_block(chunk_size, d_tokens.shape[0]),
+            tile_d=cfg.lex_tile_d,
         )
         state = topk.TopKState(scores=scores, ids=_offset_ids(ids, doc_id_offset))
         if init_state is not None:

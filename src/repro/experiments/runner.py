@@ -27,12 +27,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import obs, tune
 from repro.cluster import FaultSchedule, plan_shards, run_sharded_scan_job
 from repro.core import anchors, topk
 from repro.data import synthetic
 from repro.eval import evaluate_run, paired_randomization_test, trec
 from repro.experiments.grid import ExperimentSpec
+from repro.tune import TuningConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +98,9 @@ def run_experiment(
     max_retries: int = 0,
     speculative: bool = False,
     trace_out: str | None = None,
+    tuning: TuningConfig | None = None,
+    tune_lookup: bool = False,
+    tune_cache: str | None = None,
 ) -> dict:
     """Execute the full lifecycle; returns (and writes) the report dict.
 
@@ -117,6 +121,15 @@ def run_experiment(
     drains — run files stay byte-identical regardless, and the report's
     ``job`` section records what the scheduler did (retries, steals,
     speculation, fired faults).
+
+    ``tuning`` runs the scan under an explicit :class:`repro.tune.
+    TuningConfig`; ``tune_lookup=True`` instead looks the spec's shape
+    signature up in the persistent autotune winner cache (``tune_cache``
+    path, default resolution in `repro.tune.cache`) and runs under the
+    recorded winner — falling back to the defaults on a miss. Either way
+    the report's ``job.tuning`` block records the config hash, source, and
+    whether the cache hit; run files are byte-identical under every config
+    (the `repro.tune` contract).
 
     ``trace_out`` enables the observability layer for this run: a fresh
     tracer + metrics registry are installed for the lifecycle, the Chrome
@@ -143,23 +156,43 @@ def run_experiment(
             faults.add(legacy.specs[0])
         fail_at_segment = None
 
+    if tuning is not None and tune_lookup:
+        raise ValueError("pass either tuning= or tune_lookup=True, not both")
+    tuning_source = "explicit" if tuning is not None else "default"
+    cache_hit = False
+    if tune_lookup:
+        tuning, cache_hit = tune.best_config(
+            "scan_job",
+            shape=tune.scan_shape_sig_for(spec),
+            backend=tune.backend_sig(use_kernel=spec.use_kernel),
+            path=tune_cache,
+        )
+        tuning_source = "cache"
+
     prev_obs = None
     if trace_out is not None:
         prev_obs = obs.install(obs.Tracer(), obs.Metrics())
     try:
-        return _run_experiment_traced(
-            spec,
-            out_dir=out_dir,
-            seed=seed,
-            resume=resume,
-            collection=collection,
-            pipelined=pipelined,
-            max_workers=max_workers,
-            faults=faults,
-            max_retries=max_retries,
-            speculative=speculative,
-            trace_out=trace_out,
-        )
+        # install as the process-active config too, so knobs resolved off
+        # the explicit path (serve helpers, direct kernel calls inside the
+        # lifecycle) see the same tuning the job runs under
+        with tune.use(tuning, source=tuning_source, cache_hit=cache_hit):
+            return _run_experiment_traced(
+                spec,
+                out_dir=out_dir,
+                seed=seed,
+                resume=resume,
+                collection=collection,
+                pipelined=pipelined,
+                max_workers=max_workers,
+                faults=faults,
+                max_retries=max_retries,
+                speculative=speculative,
+                trace_out=trace_out,
+                tuning=tuning,
+                tuning_source=tuning_source,
+                cache_hit=cache_hit,
+            )
     finally:
         if prev_obs is not None:
             obs.install(*prev_obs)
@@ -178,10 +211,14 @@ def _run_experiment_traced(
     max_retries: int,
     speculative: bool,
     trace_out: str | None,
+    tuning: TuningConfig | None = None,
+    tuning_source: str = "default",
+    cache_hit: bool = False,
 ) -> dict:
     """The lifecycle body, running under whatever instruments are installed."""
     tr = obs.tracer()
     met = obs.metrics()
+    cfg = tune.resolve(tuning)
     # clamp eval cutoffs to the run depth up front — failing in evaluation
     # after the whole scan job ran would discard all the work
     if spec.k < max(spec.eval_ks):
@@ -194,14 +231,24 @@ def _run_experiment_traced(
     scorers = spec.scorers()
     docs = (jnp.asarray(coll.corpus.tokens), jnp.asarray(coll.corpus.lengths))
 
+    # the tuned chunk replaces the spec's *for the scan fold only* (stats
+    # preparation keeps the declared chunking — stats bytes depend on it);
+    # a tuned chunk the plan can't cut falls back to the declared one: a
+    # knob may be ignored, never fail a job. Chunk regrouping is byte-safe
+    # (per-doc scores are chunk-independent; the top-k combiner's
+    # positional tie-break is lexicographic on monotone id streams).
+    chunk = spec.chunk_size
+    if cfg.chunk_size is not None:
+        per_shard = spec.n_docs // max(1, spec.n_shards)
+        if spec.n_docs % max(1, spec.n_shards) == 0 and per_shard % cfg.chunk_size == 0:
+            chunk = cfg.chunk_size
+
     # the scan is a cluster job at every shard count: n_shards=1 is the
     # classic single-host layout, >1 adds per-shard checkpoints/kill/resume
     # and a merge whose output is byte-identical to the one-shard run.
     # shards spread round-robin over the visible devices (one device = a
     # host-sequential cluster, the paper's own execution model).
-    plan = plan_shards(
-        spec.n_docs, n_shards=spec.n_shards, chunk_size=spec.chunk_size
-    )
+    plan = plan_shards(spec.n_docs, n_shards=spec.n_shards, chunk_size=chunk)
     devices = jax.devices() if spec.n_shards > 1 else None
     with tr.span(
         "experiment.scan", "experiment", n_shards=plan.n_shards, pipelined=pipelined
@@ -211,7 +258,7 @@ def _run_experiment_traced(
             docs,
             scorers,
             k=spec.k,
-            chunk_size=spec.chunk_size,
+            chunk_size=chunk,
             segment_chunks=spec.segment_chunks,
             plan=plan,
             stats=coll.stats,
@@ -224,6 +271,7 @@ def _run_experiment_traced(
             faults=faults,
             max_retries=max_retries,
             speculative=speculative,
+            tuning=cfg,
         )
 
     with tr.span("experiment.run_files", "experiment"):
@@ -290,6 +338,13 @@ def _run_experiment_traced(
             "speculative": speculative,
             "scheduler": job.scheduler.describe() if job.scheduler else None,
             "faults_fired": faults.fired if faults is not None else [],
+            "tuning": {
+                "config_hash": cfg.config_hash(),
+                "source": tuning_source,
+                "cache_hit": cache_hit,
+                "overrides": cfg.overrides(),
+                "chunk_size": chunk,
+            },
             "obs": obs_block,
             "shards": [
                 {

@@ -30,6 +30,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro import tune
 from repro.cluster import FaultSchedule, build_schedule
 from repro.core import scoring
 from repro.experiments import bench as exp_bench
@@ -89,6 +90,13 @@ def print_report(report: dict) -> None:
             f"{sched['speculative_launched']} speculative "
             f"({sched['speculative_won']} won), "
             f"dead workers {list(sched['dead_workers'])}"
+        )
+    t = job.get("tuning")
+    if t and (t.get("source") != "default" or t.get("overrides")):
+        hit = ", cache hit" if t.get("cache_hit") else ""
+        print(
+            f"   tuning: {t['config_hash']} ({t['source']}{hit}) "
+            f"overrides={t.get('overrides') or {}}"
         )
     o = job.get("obs")
     if o:
@@ -174,6 +182,18 @@ def main():
                          "<out>/trace.json unless --no-trace")
     ap.add_argument("--no-trace", action="store_true",
                     help="disable tracing (metrics-only run)")
+    ap.add_argument("--tune", action="store_true",
+                    help="look this job's shape up in the autotune winner "
+                         "cache and run under the recorded TuningConfig "
+                         "(defaults on a miss; artifacts byte-identical "
+                         "either way — tuning changes speed, never bytes)")
+    ap.add_argument("--tune-cache", default=None,
+                    help="autotune winner-cache path (default: "
+                         "$REPRO_TUNE_CACHE or results/tune_cache.json)")
+    ap.add_argument("--tuning-config", default=None,
+                    help="run under an explicit TuningConfig JSON file "
+                         "(flat knob dict, see repro.tune.save); mutually "
+                         "exclusive with --tune")
     ap.add_argument("--bench", action="store_true",
                     help="also sweep the models-per-pass amortization curve")
     ap.add_argument("--bench-sizes", type=int, nargs="+", default=[1, 2, 4, 8])
@@ -204,6 +224,10 @@ def main():
             for s in seeded.specs:
                 faults.add(s)
 
+    if args.tune and args.tuning_config:
+        raise SystemExit("--tune and --tuning-config are mutually exclusive")
+    tuning = tune.load(args.tuning_config) if args.tuning_config else None
+
     coll = runner.prepare_collection(spec, seed=args.seed)  # shared with --bench
     report = runner.run_experiment(
         spec,
@@ -219,6 +243,9 @@ def main():
         max_retries=args.max_retries,
         speculative=args.speculative,
         trace_out=trace_out,
+        tuning=tuning,
+        tune_lookup=args.tune,
+        tune_cache=args.tune_cache,
     )
     print_report(report)
     print(f"wrote {out_dir}/report.json")

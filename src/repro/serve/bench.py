@@ -16,6 +16,7 @@ import numpy as np
 
 from repro import obs
 from repro.serve.service import RetrievalService
+from repro.tune import config as tune_config
 
 
 def sweep_batch_sizes(
@@ -79,10 +80,12 @@ def write_bench_json(payload: dict, path: str = "BENCH_serve.json") -> str:
 
     Every ``BENCH_*.json`` carries a ``provenance`` block (host, backend,
     jax version, device count) so perf numbers recorded on different
-    machines or backends are comparable — or visibly not.
+    machines or backends are comparable — or visibly not. The active
+    TuningConfig's hash/source is stamped alongside for the same reason.
     """
     payload = dict(payload)
     payload.setdefault("provenance", obs.provenance())
+    payload.setdefault("tuning", tune_config.provenance())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

@@ -27,12 +27,16 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.pipeline import next_pow2
+from repro.tune import config as tune_config
 
 
-def bucket_size(n: int, *, min_bucket: int = 8) -> int:
-    """Padded batch size for ``n`` queries: next power of two, floored."""
+def bucket_size(n: int, *, min_bucket: int | None = None) -> int:
+    """Padded batch size for ``n`` queries: next power of two, floored
+    (``min_bucket=None`` = the active tuning's ``serve_min_bucket``)."""
     if n < 1:
         raise ValueError("empty batch has no bucket")
+    if min_bucket is None:
+        min_bucket = tune_config.resolve(None).serve_min_bucket
     return max(min_bucket, next_pow2(n))
 
 
@@ -85,16 +89,26 @@ class Microbatcher:
     inert under the scorer (PAD_TOKEN for lexical queries, 0.0 for dense
     vectors — both score every document identically, and their rows are
     discarded before results leave the service).
+
+    The three trigger knobs default (``None``) from the active
+    :class:`repro.tune.TuningConfig` — ``serve_max_batch`` /
+    ``serve_max_delay_s`` / ``serve_min_bucket``, whose defaults are the
+    historical 64 / 5 ms / 8.
     """
 
     def __init__(
         self,
         *,
-        max_batch: int = 64,
-        max_delay: float = 5e-3,
-        min_bucket: int = 8,
+        max_batch: int | None = None,
+        max_delay: float | None = None,
+        min_bucket: int | None = None,
         pad_value=0,
+        tuning=None,
     ):
+        cfg = tune_config.resolve(tuning)
+        max_batch = cfg.serve_max_batch if max_batch is None else max_batch
+        max_delay = cfg.serve_max_delay_s if max_delay is None else max_delay
+        min_bucket = cfg.serve_min_bucket if min_bucket is None else min_bucket
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if max_delay < 0:

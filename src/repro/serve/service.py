@@ -67,11 +67,12 @@ class RetrievalService:
         self,
         sessions: Mapping[str, LexicalSession | DenseSession | ShardedLexicalSession],
         *,
-        max_batch: int = 64,
-        max_delay: float = 5e-3,
-        min_bucket: int = 8,
+        max_batch: int | None = None,
+        max_delay: float | None = None,
+        min_bucket: int | None = None,
         clock: Callable[[], float] = time.monotonic,
         registry: Metrics | None = None,
+        tuning=None,
     ):
         if not sessions:
             raise ValueError("need at least one session")
@@ -81,12 +82,14 @@ class RetrievalService:
         # Metrics (the launcher's shutdown summary); default is the process
         # registry, resolved per dispatch so obs.session() swaps apply
         self._registry = registry
+        # trigger knobs default (None) from `tuning` / the active TuningConfig
         self._batchers = {
             kind: Microbatcher(
                 max_batch=max_batch,
                 max_delay=max_delay,
                 min_bucket=min_bucket,
                 pad_value=sess.pad_value,
+                tuning=tuning,
             )
             for kind, sess in self.sessions.items()
         }

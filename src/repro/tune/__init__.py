@@ -1,0 +1,77 @@
+"""repro.tune — the autotuning subsystem.
+
+Three pieces (see docs/ARCHITECTURE.md §Autotuning):
+
+* :mod:`repro.tune.config` — the frozen :class:`TuningConfig` centralizing
+  every performance knob (kernel block/tile sizes, chunk/prefetch/worker
+  geometry, scheduler backoff, serve microbatch triggers), threaded through
+  kernels/scan/pipeline/cluster/serve with defaults that reproduce the old
+  hand-picked values bit-for-bit. **Tuning changes speed, never bytes.**
+* :mod:`repro.tune.search` — the async model-based search (candidate
+  generator over the legal knob space + cheap surrogate ranking + async
+  measurement loop) that finds winners against the existing benchmarks.
+* :mod:`repro.tune.cache` — the persistent winner cache, keyed
+  kind × backend × shape-signature × knob-space version like the jit fold
+  cache, with :func:`best_config` lookup and graceful default fallback.
+
+The shape-signature helpers here are the *shared vocabulary* between the
+recorder (``benchmarks/autotune.py``) and the readers (the experiment
+runner's ``--tune``): both sides build the signature from the same fields,
+so a recorded winner is found by construction, not by string luck.
+"""
+
+from repro.tune import cache, config, search  # noqa: F401
+from repro.tune.cache import TuneCache, backend_sig, best_config  # noqa: F401
+from repro.tune.config import (  # noqa: F401
+    DEFAULT,
+    SPACE_VERSION,
+    ActiveTuning,
+    TuningConfig,
+    active,
+    load,
+    provenance,
+    resolve,
+    save,
+    set_active,
+    use,
+)
+from repro.tune.search import Knob, KnobSpace, SearchResult, Surrogate, Trial  # noqa: F401
+from repro.tune.search import search as run_search  # noqa: F401
+
+
+def scan_shape_sig(
+    *,
+    n_docs: int,
+    n_queries: int,
+    k: int,
+    n_shards: int,
+    n_models: int,
+    max_doc_len: int,
+) -> str:
+    """Shape signature of a sharded scan job — what a scan-tuning winner is
+    keyed on. Chunk size is deliberately *absent*: it is a knob, not a
+    shape (the tuned chunk replaces the declared one)."""
+    return (
+        f"scan:d{n_docs}:q{n_queries}:L{max_doc_len}:k{k}"
+        f":s{n_shards}:m{n_models}"
+    )
+
+
+def scan_shape_sig_for(spec) -> str:
+    """The scan signature of an `repro.experiments.grid.ExperimentSpec` —
+    the runner's ``--tune`` lookup and ``benchmarks/autotune.py``'s smoke
+    target both call this, which is the agreement that makes the CI
+    write→reload→hit round-trip structural."""
+    return scan_shape_sig(
+        n_docs=spec.n_docs,
+        n_queries=spec.n_queries,
+        k=spec.k,
+        n_shards=spec.n_shards,
+        n_models=len(spec.scorers()),
+        max_doc_len=spec.max_doc_len,
+    )
+
+
+def serve_shape_sig(*, n_docs: int, k: int, chunk_size: int, kind: str) -> str:
+    """Shape signature of a serve session (microbatch-trigger tuning)."""
+    return f"serve:{kind}:d{n_docs}:k{k}:c{chunk_size}"

@@ -1,0 +1,157 @@
+"""Persistent autotune winner cache — keyed like the jit fold cache.
+
+`cluster.segment_fold` memoizes compiled programs on (scorer grid, k,
+chunk_size, kernel, tuning geometry); this cache memoizes *winning
+TuningConfigs* the same way, one level up and across processes:
+
+    key = kind × backend × shape-signature × knob-space version
+
+* **kind** — what was measured ("scan_job", "serve", ...); a serve winner
+  must never be handed to a scan job even if the shape strings collide.
+* **backend** — ``jax.default_backend()`` plus the resolved kernel backend
+  when the measurement ran through Pallas (`backend_sig`); a CPU-interpret
+  winner says nothing about a TPU.
+* **shape-signature** — the workload geometry (docs × queries × k ×
+  shards × models), built by `repro.tune.scan_shape_sig` and friends so
+  the recorder (benchmarks/autotune.py) and the reader (the experiment
+  runner's ``--tune`` lookup) agree by construction.
+* **knob-space version** — `config.SPACE_VERSION`; bumping it stales every
+  recorded winner at once, because a knob that changed meaning would
+  otherwise half-apply.
+
+Lookups degrade, never fail: a miss, a stale version, a kind mismatch, an
+unreadable file, or an entry whose knobs no longer parse all fall back to
+the defaults with ``cache_hit=False`` — ``--tune`` on a cold cache is just
+a slower spelling of the default run.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+from repro.tune.config import SPACE_VERSION, DEFAULT, TuningConfig
+
+DEFAULT_PATH = "results/tune_cache.json"
+
+
+def cache_path(path: str | None = None) -> str:
+    """Resolve the cache file: explicit arg > $REPRO_TUNE_CACHE > default."""
+    return path or os.environ.get("REPRO_TUNE_CACHE") or DEFAULT_PATH
+
+
+def backend_sig(*, use_kernel: bool = False) -> str:
+    """The backend half of the key: XLA backend, plus the resolved Pallas
+    mode when the measured path runs through the kernels (an interpret-mode
+    winner and a compiled-mode winner are different experiments)."""
+    import jax
+
+    sig = jax.default_backend()
+    if use_kernel:
+        from repro.kernels import ops
+
+        sig += "+" + ops.kernel_backend()
+    return sig
+
+
+def cache_key(kind: str, backend: str, shape: str, version: int = SPACE_VERSION) -> str:
+    return f"{kind}|{backend}|{shape}|v{version}"
+
+
+class TuneCache:
+    """The on-disk winner table: one JSON file, atomic rewrite on put."""
+
+    def __init__(self, path: str | None = None):
+        self.path = cache_path(path)
+
+    # -- I/O ------------------------------------------------------------------
+
+    def _read(self) -> dict:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {"entries": {}}
+        if not isinstance(data, dict) or not isinstance(data.get("entries"), dict):
+            return {"entries": {}}
+        return data
+
+    def _write(self, data: dict) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = os.path.join(d or ".", ".tmp-" + os.path.basename(self.path))
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.path)
+
+    # -- API ------------------------------------------------------------------
+
+    def put(
+        self,
+        *,
+        kind: str,
+        shape: str,
+        config: TuningConfig,
+        score: float,
+        backend: str | None = None,
+        meta: dict | None = None,
+    ) -> str:
+        """Record a winner; returns its key. ``score`` is the measured
+        figure of merit (docs/s, qps — higher is better), kept so a later
+        re-tune can tell whether it actually improved on the record."""
+        backend = backend if backend is not None else backend_sig()
+        key = cache_key(kind, backend, shape)
+        data = self._read()
+        data["entries"][key] = {
+            "kind": kind,
+            "backend": backend,
+            "shape": shape,
+            "space_version": SPACE_VERSION,
+            "config": config.overrides(),  # defaults stay implicit
+            "config_hash": config.config_hash(),
+            "score": float(score),
+            "meta": meta or {},
+        }
+        self._write(data)
+        return key
+
+    def get(
+        self, *, kind: str, shape: str, backend: str | None = None
+    ) -> tuple[TuningConfig, bool]:
+        """(config, hit). Every failure mode — miss, stale knob-space
+        version, recorded-kind mismatch, unparsable knobs — returns
+        ``(DEFAULT, False)``; a hit returns the recorded winner."""
+        backend = backend if backend is not None else backend_sig()
+        entry = self._read()["entries"].get(cache_key(kind, backend, shape))
+        if not isinstance(entry, dict):
+            return DEFAULT, False
+        if entry.get("space_version") != SPACE_VERSION:
+            return DEFAULT, False  # stale: knobs may have changed meaning
+        if entry.get("kind") != kind:
+            return DEFAULT, False  # a corrupted/hand-edited entry
+        try:
+            cfg = TuningConfig.from_dict(entry.get("config") or {}, strict=True)
+        except (TypeError, ValueError):
+            return DEFAULT, False
+        return cfg, True
+
+    def entry(self, *, kind: str, shape: str, backend: str | None = None) -> Any:
+        """The raw recorded entry (score, meta, hash) or None — for tests
+        and the autotune report."""
+        backend = backend if backend is not None else backend_sig()
+        return self._read()["entries"].get(cache_key(kind, backend, shape))
+
+
+def best_config(
+    kind: str,
+    *,
+    shape: str,
+    backend: str | None = None,
+    path: str | None = None,
+) -> tuple[TuningConfig, bool]:
+    """The one-call lookup: ``repro.tune.best_config("scan_job",
+    shape=sig)`` → (winner-or-default, cache_hit)."""
+    return TuneCache(path).get(kind=kind, shape=shape, backend=backend)

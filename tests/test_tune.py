@@ -1,0 +1,443 @@
+"""The autotuning subsystem: config semantics, the winner cache, the AMBS
+search loop, and — load-bearing above all — the **byte-identity contract**:
+
+    tuning changes speed, never bytes.
+
+A sharded scan job run under *any* legal TuningConfig must produce a merged
+top-k state (ids and score bytes) identical to the default-config oracle;
+the experiment runner must write byte-identical run files under an explicit
+tuning, a cache-hit tuning, and no tuning at all. Deterministic variants
+pin the corners in tier-1; hypothesis drives randomized configs through the
+same job when installed (skipped, not failed, otherwise — tests/_hyp.py).
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cluster, tune
+from repro.core import anchors, scoring
+from repro.data import synthetic
+from repro.experiments import grid as exp_grid
+from repro.experiments import runner
+from repro.tune import DEFAULT, Knob, KnobSpace, TuneCache, TuningConfig
+from repro.tune import config as tune_config
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+VOCAB = 512
+N_DOCS = 256
+CHUNK = 64
+K = 5
+N_SHARDS = 2
+SEGMENT_CHUNKS = 1  # 64-row segments: 2 per shard, so prefetch has work
+
+SCORERS = lambda: [  # noqa: E731
+    scoring.make_variant("ql_lm"),
+    scoring.make_variant("bm25"),
+]
+
+
+@pytest.fixture(scope="module")
+def collection():
+    corpus = synthetic.make_corpus(n_docs=N_DOCS, vocab=VOCAB, max_len=32, seed=3)
+    stats = anchors.collection_stats(
+        jnp.asarray(corpus.tokens), jnp.asarray(corpus.lengths), vocab=VOCAB,
+        chunk_size=CHUNK,
+    )
+    queries = jnp.asarray(synthetic.make_queries(corpus, n_queries=8, seed=4))
+    docs = (np.asarray(corpus.tokens), np.asarray(corpus.lengths))
+    return stats, queries, docs
+
+
+def run_job(collection, cfg=None, *, use_kernel=False, ckpt_dir=None, **kw):
+    stats, queries, docs = collection
+    return cluster.run_sharded_scan_job(
+        queries, docs, SCORERS(),
+        k=K, chunk_size=CHUNK, segment_chunks=SEGMENT_CHUNKS,
+        n_shards=N_SHARDS, stats=stats, ckpt_dir=ckpt_dir,
+        use_kernel=use_kernel, tuning=cfg, **kw,
+    )
+
+
+def state_bytes(state) -> bytes:
+    return np.asarray(state.scores).tobytes() + np.asarray(state.ids).tobytes()
+
+
+@pytest.fixture(scope="module")
+def oracle(collection):
+    """The default-config job — what every tuned run must byte-match."""
+    return state_bytes(run_job(collection).state)
+
+
+# -- TuningConfig semantics ---------------------------------------------------
+
+
+def test_default_config_is_identity():
+    assert TuningConfig() == DEFAULT
+    assert DEFAULT.overrides() == {}
+    assert DEFAULT.resolve_chunk_size(128) == 128
+    assert DEFAULT.lex_block(128) == 128  # None follows the chunk
+    assert DEFAULT.dense_block(256) == 256
+    assert DEFAULT.fold_key(False) == ()  # host folds: chunk already keys
+    assert len(DEFAULT.fold_key(True)) == 3  # kernel folds: block geometry
+
+
+def test_block_fallback_when_not_dividing():
+    cfg = TuningConfig(lex_block_d=48)
+    assert cfg.lex_block(64, 48) == 48  # divides: knob applies
+    assert cfg.lex_block(64, 100) == 64  # doesn't: fall back to the chunk
+    assert TuningConfig(dense_block_d=96).dense_block(32, 100) == 32
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        TuningConfig(chunk_size=0)
+    with pytest.raises(ValueError):
+        TuningConfig(lex_tile_d=-1)
+    with pytest.raises(ValueError):
+        TuningConfig(backoff_base=-0.5)
+    with pytest.raises(ValueError):
+        TuningConfig.from_dict({"bogus_knob": 1})
+    # non-strict drops unknowns (forward-compat read of a newer file)
+    assert TuningConfig.from_dict({"bogus_knob": 1}, strict=False) == DEFAULT
+
+
+def test_describe_from_dict_roundtrip_and_hash():
+    cfg = TuningConfig(chunk_size=32, lex_tile_d=8, serve_max_batch=128)
+    assert TuningConfig.from_dict(cfg.describe()) == cfg
+    assert cfg.overrides() == {
+        "chunk_size": 32, "lex_tile_d": 8, "serve_max_batch": 128,
+    }
+    assert cfg.config_hash() != DEFAULT.config_hash()
+    assert cfg.config_hash() == cfg.replace().config_hash()  # content hash
+
+
+def test_save_load_roundtrip(tmp_path):
+    cfg = TuningConfig(prefetch_depth=3, writer_reuse=True)
+    path = tune.save(cfg, str(tmp_path / "cfg.json"))
+    assert tune.load(path) == cfg
+
+
+def test_use_scoping_and_resolve():
+    assert tune.active().config == DEFAULT
+    cfg = TuningConfig(chunk_size=32)
+    with tune.use(cfg, source="cache", cache_hit=True) as rec:
+        assert tune.active().config == cfg
+        assert rec.provenance() == {
+            "config_hash": cfg.config_hash(), "source": "cache", "cache_hit": True,
+        }
+        # explicit argument beats the installed config
+        explicit = TuningConfig(chunk_size=16)
+        assert tune_config.resolve(explicit) == explicit
+        assert tune_config.resolve(None) == cfg
+    assert tune.active().config == DEFAULT  # nothing leaked
+
+
+# -- winner cache -------------------------------------------------------------
+
+
+def _put_one(tmp_path, **kw):
+    cache = TuneCache(str(tmp_path / "cache.json"))
+    args = dict(
+        kind="scan_job", shape="scan:test", backend="cpu",
+        config=TuningConfig(chunk_size=32), score=123.0,
+    )
+    args.update(kw)
+    key = cache.put(**args)
+    return cache, key, args
+
+
+def test_cache_roundtrip(tmp_path):
+    cache, key, args = _put_one(tmp_path, meta={"target": "t"})
+    got, hit = cache.get(kind="scan_job", shape="scan:test", backend="cpu")
+    assert hit and got == args["config"]
+    entry = cache.entry(kind="scan_job", shape="scan:test", backend="cpu")
+    assert entry["score"] == 123.0 and entry["meta"] == {"target": "t"}
+    assert entry["config_hash"] == args["config"].config_hash()
+    # one-call form, same answer
+    got2, hit2 = tune.best_config(
+        "scan_job", shape="scan:test", backend="cpu", path=cache.path
+    )
+    assert hit2 and got2 == got
+
+
+def test_cache_miss_and_backend_isolation(tmp_path):
+    cache, _, _ = _put_one(tmp_path)
+    assert cache.get(kind="scan_job", shape="scan:other", backend="cpu") == (
+        DEFAULT, False,
+    )
+    assert cache.get(kind="scan_job", shape="scan:test", backend="tpu") == (
+        DEFAULT, False,
+    )
+
+
+def _corrupt(cache, mutate):
+    data = json.load(open(cache.path))
+    (entry,) = data["entries"].values()
+    mutate(entry)
+    with open(cache.path, "w") as f:
+        json.dump(data, f)
+
+
+def test_cache_stale_space_version_falls_back(tmp_path):
+    cache, _, _ = _put_one(tmp_path)
+    _corrupt(cache, lambda e: e.update(space_version=tune.SPACE_VERSION - 1))
+    assert cache.get(kind="scan_job", shape="scan:test", backend="cpu") == (
+        DEFAULT, False,
+    )
+
+
+def test_cache_kind_mismatch_falls_back(tmp_path):
+    cache, _, _ = _put_one(tmp_path)
+    _corrupt(cache, lambda e: e.update(kind="serve"))
+    assert cache.get(kind="scan_job", shape="scan:test", backend="cpu") == (
+        DEFAULT, False,
+    )
+
+
+def test_cache_unknown_knob_falls_back(tmp_path):
+    cache, _, _ = _put_one(tmp_path)
+    _corrupt(cache, lambda e: e.update(config={"block_z": 7}))
+    assert cache.get(kind="scan_job", shape="scan:test", backend="cpu") == (
+        DEFAULT, False,
+    )
+
+
+def test_cache_unreadable_file_falls_back(tmp_path):
+    path = tmp_path / "garbage.json"
+    path.write_text("not json {")
+    assert TuneCache(str(path)).get(
+        kind="scan_job", shape="s", backend="cpu"
+    ) == (DEFAULT, False)
+
+
+def test_shape_sig_agreement():
+    """The runner's --tune lookup and the autotune recorder must compute the
+    same signature from the same spec — the round trip is structural."""
+    spec = exp_grid.get_experiment("smoke")
+    assert tune.scan_shape_sig_for(spec) == tune.scan_shape_sig(
+        n_docs=spec.n_docs, n_queries=spec.n_queries, k=spec.k,
+        n_shards=spec.n_shards, n_models=len(spec.scorers()),
+        max_doc_len=spec.max_doc_len,
+    )
+    # chunk_size is a knob, not a shape: deliberately absent
+    assert "c" + str(spec.chunk_size) not in tune.scan_shape_sig_for(spec)
+
+
+# -- search loop --------------------------------------------------------------
+
+
+def _toy_space():
+    return KnobSpace(
+        kind="scan_job",
+        knobs=(
+            Knob("chunk_size", (32, 64, 128)),
+            Knob("prefetch_depth", (1, 2)),
+        ),
+        base=DEFAULT.replace(chunk_size=32, prefetch_depth=1),
+    )
+
+
+def test_search_finds_planted_optimum():
+    space = _toy_space()
+
+    def measure(cfg):
+        return 100.0 - abs(cfg.chunk_size - 64) - abs(cfg.prefetch_depth - 2)
+
+    result = tune.run_search(space, measure, budget=6, seed=0)
+    assert result.best.config.chunk_size == 64
+    assert result.best.config.prefetch_depth == 2
+    assert result.default.config == space.base  # the default was measured
+    assert result.speedup_x >= 1.0
+
+
+def test_search_deterministic_and_default_in_tournament():
+    space = _toy_space()
+    measure = lambda cfg: float(cfg.chunk_size)  # noqa: E731
+    r1 = tune.run_search(space, measure, budget=4, seed=7)
+    r2 = tune.run_search(space, measure, budget=4, seed=7)
+    assert r1.best.config == r2.best.config
+    assert {t.config.config_hash() for t in r1.trials} == {
+        t.config.config_hash() for t in r2.trials
+    }
+    # best can never be worse than the default: it is in the tournament
+    assert r1.best.score >= r1.default.score
+
+
+def test_search_failed_trials_rank_last_and_all_fail_raises():
+    space = _toy_space()
+
+    def flaky(cfg):
+        if cfg.chunk_size == 128:
+            raise RuntimeError("boom")
+        return float(cfg.chunk_size)
+
+    result = tune.run_search(space, flaky, budget=6, seed=0)
+    errs = [t for t in result.trials if t.error]
+    assert errs and all(t.score == float("-inf") for t in errs)
+    assert result.best.config.chunk_size == 64  # best OK trial wins
+
+    with pytest.raises(RuntimeError, match="every scan_job trial failed"):
+        tune.run_search(
+            space, lambda cfg: 1 / 0, budget=3, seed=0
+        )
+
+
+def test_candidates_respect_constraint_and_lead_with_base():
+    space = KnobSpace(
+        kind="scan_job",
+        knobs=(Knob("chunk_size", (32, 48, 64)),),
+        constraint=lambda cfg: cfg.chunk_size is None or 64 % cfg.chunk_size == 0,
+    )
+    cands = space.candidates()
+    assert cands[0] == space.base  # the default-config oracle leads the pool
+    assert all(c.chunk_size in (None, 32, 64) for c in cands)  # 48 rejected
+
+
+# -- the byte-identity contract ----------------------------------------------
+
+# execution-geometry corners: every one must byte-match the default oracle
+VARIANTS = (
+    TuningConfig(chunk_size=32),  # finer fold chunks (2x the merges)
+    TuningConfig(prefetch_depth=1, cross_shard_prefetch=False),  # no overlap
+    TuningConfig(prefetch_depth=4, max_workers=1),  # deep prefetch, serial
+    TuningConfig(lex_block_d=32, lex_tile_d=8, dense_block_d=32),  # kernel geo
+)
+
+
+@pytest.mark.parametrize("cfg", VARIANTS, ids=lambda c: str(c.overrides()))
+def test_scan_bytes_invariant_to_tuning(collection, oracle, cfg):
+    assert state_bytes(run_job(collection, cfg).state) == oracle
+
+
+def test_scan_bytes_invariant_under_active_config(collection, oracle):
+    """No explicit tuning= argument: the installed active config applies and
+    still never changes bytes."""
+    with tune.use(TuningConfig(chunk_size=32, prefetch_depth=1)):
+        assert state_bytes(run_job(collection).state) == oracle
+
+
+def test_kernel_scan_bytes_invariant_to_tuning(collection, oracle):
+    base = state_bytes(run_job(collection, use_kernel=True).state)
+    assert base == oracle  # kernel fold matches the host oracle to the bit
+    tuned = TuningConfig(lex_block_d=32, lex_tile_d=8)
+    assert state_bytes(run_job(collection, tuned, use_kernel=True).state) == base
+
+
+def test_writer_reuse_checkpointed_job_bytes_and_resume(collection, oracle, tmp_path):
+    cfg = TuningConfig(writer_reuse=True, prefetch_depth=1)
+    ckpt = str(tmp_path / "ckpt")
+    first = run_job(collection, cfg, ckpt_dir=ckpt)
+    assert state_bytes(first.state) == oracle
+    assert first.segments_run > 0
+    # resume from the committed segments: nothing re-runs, same bytes
+    again = run_job(collection, cfg, ckpt_dir=ckpt)
+    assert again.segments_run == 0
+    assert state_bytes(again.state) == oracle
+
+
+if HAVE_HYPOTHESIS:
+    legal_configs = st.builds(
+        TuningConfig,
+        chunk_size=st.sampled_from([None, 32, 64, 128]),
+        prefetch_depth=st.integers(1, 3),
+        max_workers=st.sampled_from([None, 1, 2]),
+        cross_shard_prefetch=st.booleans(),
+        writer_reuse=st.booleans(),
+        lex_block_d=st.sampled_from([None, 32, 64]),
+        lex_tile_d=st.sampled_from([8, 16, 32]),
+        dense_block_d=st.sampled_from([None, 32, 64]),
+    )
+else:
+    legal_configs = None
+
+
+@settings(max_examples=12, deadline=None)
+@given(cfg=legal_configs)
+def test_scan_bytes_invariant_to_random_tuning(collection, oracle, cfg):
+    """The property itself: ANY legal config — including chunk sizes that
+    regroup the whole fold — produces the oracle's exact bytes."""
+    assert state_bytes(run_job(collection, cfg).state) == oracle
+
+
+# -- runner integration -------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_spec():
+    return exp_grid.ExperimentSpec(
+        name="tunetest",
+        grids=(exp_grid.GridSpec("ql_lm"), exp_grid.GridSpec("bm25")),
+        n_docs=N_DOCS, n_queries=8, vocab=VOCAB, max_doc_len=32,
+        k=K, chunk_size=CHUNK, segment_chunks=2,
+        eval_ks=(5,), baseline="ql_lm",
+    )
+
+
+def _run_files(out_dir):
+    runs = os.path.join(out_dir, "runs")
+    return {
+        name: open(os.path.join(runs, name), "rb").read()
+        for name in sorted(os.listdir(runs))
+    }
+
+
+def test_runner_tuning_provenance_and_run_file_bytes(tiny_spec, tmp_path):
+    coll = runner.prepare_collection(tiny_spec, seed=0)
+    default = runner.run_experiment(
+        tiny_spec, out_dir=str(tmp_path / "default"), collection=coll
+    )
+    assert default["job"]["tuning"]["source"] == "default"
+    assert default["job"]["tuning"]["overrides"] == {}
+
+    cfg = TuningConfig(chunk_size=32, prefetch_depth=1, lex_tile_d=8)
+    tuned = runner.run_experiment(
+        tiny_spec, out_dir=str(tmp_path / "tuned"), collection=coll, tuning=cfg
+    )
+    t = tuned["job"]["tuning"]
+    assert t["source"] == "explicit" and t["config_hash"] == cfg.config_hash()
+    assert t["chunk_size"] == 32  # divides the shard: the knob applied
+    assert t["overrides"]["chunk_size"] == 32
+
+    assert _run_files(tmp_path / "default") == _run_files(tmp_path / "tuned")
+
+    with pytest.raises(ValueError, match="not both"):
+        runner.run_experiment(
+            tiny_spec, out_dir=str(tmp_path / "x"), collection=coll,
+            tuning=cfg, tune_lookup=True,
+        )
+
+
+def test_runner_cache_lookup_hit_and_miss(tiny_spec, tmp_path):
+    coll = runner.prepare_collection(tiny_spec, seed=0)
+    cache_path = str(tmp_path / "cache.json")
+
+    # cold cache: --tune degrades to the defaults, cache_hit False
+    miss = runner.run_experiment(
+        tiny_spec, out_dir=str(tmp_path / "miss"), collection=coll,
+        tune_lookup=True, tune_cache=cache_path,
+    )
+    assert miss["job"]["tuning"] == {
+        **miss["job"]["tuning"],
+        "source": "cache", "cache_hit": False, "overrides": {},
+    }
+
+    # record a winner under the runner's own signature, then look it up
+    cfg = TuningConfig(chunk_size=32)
+    TuneCache(cache_path).put(
+        kind="scan_job", shape=tune.scan_shape_sig_for(tiny_spec),
+        config=cfg, score=1.0,
+        backend=tune.backend_sig(use_kernel=tiny_spec.use_kernel),
+    )
+    hit = runner.run_experiment(
+        tiny_spec, out_dir=str(tmp_path / "hit"), collection=coll,
+        tune_lookup=True, tune_cache=cache_path,
+    )
+    t = hit["job"]["tuning"]
+    assert t["cache_hit"] is True and t["source"] == "cache"
+    assert t["config_hash"] == cfg.config_hash()
+    assert _run_files(tmp_path / "miss") == _run_files(tmp_path / "hit")
