@@ -190,6 +190,7 @@ def _serve_target(*, repeats: int, seed: int = 0) -> Target:
         knobs=(
             Knob("serve_max_batch", (16, 32, 64, 128)),
             Knob("serve_min_bucket", (8, 16)),
+            Knob("serve_max_bucket", (64, 128, 256)),
         ),
         base=base,
     )

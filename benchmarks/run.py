@@ -24,6 +24,7 @@ MODULES = (
     "sharded_scan",
     "pipeline_scan",
     "autotune",
+    "serve_load",
 )
 
 
@@ -33,7 +34,11 @@ def main() -> None:
     for name in MODULES:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            mod.run(rows)
+            result = mod.run(rows)
+            # optional per-module regression guard over the payload it
+            # just measured (curve-shape asserts live with the benchmark)
+            if hasattr(mod, "check"):
+                mod.check(result)
             print(f"# [ok] {name}", file=sys.stderr)
         except Exception:  # noqa: BLE001 — isolate per-benchmark failures
             failures.append(name)

@@ -6,10 +6,15 @@ the serving-relevant restatement of paper Figure 2. Runs both session
 kinds — the lexical raw-token scan and the dense Pallas-kernel path — and
 writes the lexical curve (the paper's setting) to ``BENCH_serve.json``.
 
-On this CPU host the scan has no shared I/O fixed cost, so the measured
+On this CPU host the scan has no shared I/O fixed cost, so the absolute
 curve is reported, not asserted (same caveat as fig2_scaling); the asserts
 here check service invariants: every submitted query is answered exactly
-once and padding never leaks into results.
+once and padding never leaks into results. One *shape* property is
+guarded, though (:func:`check`, called by the harness): amortization must
+stay monotone through the largest batch point. The bucket-ladder cap
+(``serve_max_bucket``) exists precisely to keep the big-batch tail from
+falling off the per-query sweet spot — a reappearing cliff at the largest
+point means the cap regressed.
 """
 
 from __future__ import annotations
@@ -38,7 +43,7 @@ def run(csv_rows: list):
         session,
         lambda n, seed: synthetic.make_queries(corpus, n_queries=n, seed=200 + seed),
         BATCH_SIZES,
-        repeats=2,
+        repeats=3,
     )
     for pt in payload["curve"]:
         csv_rows.append(
@@ -68,3 +73,22 @@ def run(csv_rows: list):
     path = write_bench_json(payload)
     csv_rows.append(("serve_bench_json", float(len(payload["curve"])), path))
     return payload
+
+
+def check(payload: dict) -> None:
+    """Regression guard (harness hook): the amortization curve must stay
+    monotone through the largest batch point — ``amortization_x`` at the
+    biggest batch may not fall below the mid-curve peak (small tolerance
+    for run-to-run noise). An uncapped bucket ladder fails this on this
+    host: the @256 point pads past the per-query sweet spot and its
+    amortization drops ~10% below the @64 peak."""
+    curve = payload["curve"]
+    if len(curve) < 3:
+        return
+    peak = max(pt["amortization_x"] for pt in curve[1:-1])
+    tail = curve[-1]["amortization_x"]
+    assert tail >= peak * 0.95, (
+        f"serve amortization cliff at batch {curve[-1]['batch']}: "
+        f"{tail:.3f}x < 0.95 * mid-curve peak {peak:.3f}x "
+        "(bucket-ladder cap regressed?)"
+    )

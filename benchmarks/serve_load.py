@@ -1,0 +1,359 @@
+"""Open-loop sustained-load serve benchmark -> BENCH_serve_load.json.
+
+The C1 sweep (serve_latency) is closed-loop: it waits for each wave, so it
+can never see the serving *knee*. This benchmark offers load the server
+did not agree to — seeded Poisson (or burst) arrivals replayed through the
+discrete-event generator in `repro.serve.loadgen`, with the virtual clock
+advanced by the real, metered scan time of every dispatched block — and
+sweeps offered QPS across the knee (factors of the calibrated capacity).
+
+At every point it runs the service twice over the *same* schedule and
+query set:
+
+* **static** — the default trigger knobs, no admission, no policy: the
+  pre-PR serving configuration, where an overloaded queue grows without
+  bound and tail latency follows it;
+* **adaptive** — the SLO closed loop (`AdaptiveBatchPolicy`) plus
+  admission control (bounded queue, shed): latency is held near the SLO
+  by bounding the backlog and re-picking the triggers online.
+
+Asserted invariants (per run): every completed request's scores AND ids
+are byte-identical to a single-scan oracle of the whole query set (the
+policy/admission change speed and admission, never bytes); shed accounting
+is exact (completed + shed == offered, and matches the obs counters); the
+policy's oscillation guard reports zero violations. The full run
+additionally asserts the headline: at some offered QPS the static config
+violates the p99 SLO while adaptive meets it with occupancy no worse.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import make_collection, write_bench_json
+from repro.data import synthetic
+from repro.obs.metrics import Metrics
+from repro.serve import (
+    AdaptiveBatchPolicy,
+    AdmissionController,
+    LexicalSession,
+    MeteredSession,
+    RetrievalService,
+    VirtualClock,
+    burst_schedule,
+    poisson_schedule,
+    run_open_loop,
+)
+from repro.serve.microbatch import bucket_size, pad_rows
+from repro.tune import config as tune_config
+
+K = 32
+CHUNK = 512
+N_REQUESTS = 2000
+QPS_FACTORS = (0.25, 0.75, 1.5)  # below / near / past the capacity knee
+SEED = 0
+
+
+def _warm_ladder(session, queries: np.ndarray, min_bucket: int, cap: int) -> None:
+    """Compile every bucket shape the batcher can produce before anything
+    is timed: the load runs meter *real* scan seconds into the virtual
+    clock, and a first-dispatch jit trace would otherwise appear as a
+    massive in-band stall (and the adaptive run would hit fresh shapes
+    mid-flight whenever the policy re-picks the block size)."""
+    size = min_bucket
+    while size <= cap:
+        block = pad_rows(queries[: min(size, len(queries))], size, session.pad_value)
+        np.asarray(session.search(block).scores)
+        size *= 2
+
+
+def _oracle_rows(session, queries: np.ndarray) -> list[tuple[bytes, bytes]]:
+    """Per-query (scores, ids) bytes from ONE scan of the whole set in a
+    single padded block — the grouping-free oracle. Per-row independence
+    of the scan makes this the reference for *any* microbatch grouping."""
+    n = len(queries)
+    padded = pad_rows(
+        queries, bucket_size(n, min_bucket=1, max_bucket=None), session.pad_value
+    )
+    state = session.search(padded)
+    scores = np.asarray(state.scores)[:n]
+    ids = np.asarray(state.ids)[:n]
+    return [(scores[i].tobytes(), ids[i].tobytes()) for i in range(n)]
+
+
+def _calibrate(session, queries: np.ndarray, cap: int) -> float:
+    """Median wall seconds of one full cap-sized block scan (the unit the
+    capacity estimate and the SLO are derived from)."""
+    block = queries[:cap]
+    times = []
+    for _ in range(1 + 3):  # 1 warmup
+        t0 = time.perf_counter()
+        np.asarray(session.search(block).scores)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times[1:]))
+
+
+def _run_point(
+    session,
+    queries: np.ndarray,
+    schedule: np.ndarray,
+    *,
+    adaptive: bool,
+    slo_s: float,
+    queue_limit: int,
+    interval_s: float,
+):
+    clock = VirtualClock()
+    metered = MeteredSession(session, clock)
+    registry = Metrics()
+    policy = admission = None
+    if adaptive:
+        policy = AdaptiveBatchPolicy(
+            slo_p99_s=slo_s, interval_s=interval_s, window_s=8 * interval_s
+        )
+        admission = AdmissionController(queue_limit=queue_limit, on_full="shed")
+    service = RetrievalService(
+        {session.kind: metered},
+        clock=clock,
+        registry=registry,
+        admission=admission,
+        policy=policy,
+    )
+    result = run_open_loop(service, clock, schedule, queries, kind=session.kind)
+    return result, service, registry, policy
+
+
+def _summarize(result, service, registry, policy) -> dict:
+    blocks = service.metrics
+    n_padded = sum(r.n_padded for r in blocks)
+    summary = {
+        "n_offered": result.n_offered,
+        "n_completed": result.n_completed,
+        "n_shed": len(result.shed),
+        "shed_rate": result.shed_rate,
+        "n_blocks": len(blocks),
+        "occupancy": (sum(r.n_real for r in blocks) / n_padded) if n_padded else 0.0,
+        "duration_s": result.duration_s,
+        **result.latency_quantiles(),
+    }
+    if policy is not None:
+        summary["policy"] = {
+            k: policy.describe()[k]
+            for k in ("adjustments", "flips", "damped", "oscillation_violations")
+        }
+        summary["effective"] = policy.effective
+    return summary
+
+
+def _check_run(result, registry, oracle, policy=None) -> None:
+    """The per-run invariants: byte identity, exact shed accounting against
+    the obs counters, and a quiet oscillation guard."""
+    for i, rid in result.rid_of.items():
+        res = result.results[rid]
+        assert (res.scores.tobytes(), res.ids.tobytes()) == oracle[i], (
+            f"request {i} (rid {rid}) differs from the single-scan oracle"
+        )
+    assert result.n_completed + len(result.shed) == result.n_offered
+    assert registry.counter("serve.admitted").value == result.n_completed
+    assert registry.counter("serve.shed").value == len(result.shed)
+    assert registry.counter("serve.requests").value == result.n_completed
+    shed_by_reason = {}
+    for _, outcome in result.shed:
+        shed_by_reason[outcome.reason] = shed_by_reason.get(outcome.reason, 0) + 1
+    for reason, count in shed_by_reason.items():
+        assert registry.counter(f"serve.shed.{reason}").value == count, reason
+    if policy is not None:
+        assert policy.oscillation_violations == 0, "oscillation guard broke"
+
+
+def sweep(
+    *,
+    n_requests: int = N_REQUESTS,
+    qps_factors=QPS_FACTORS,
+    qps_list=None,
+    slo_p99_ms: float | None = None,
+    seed: int = SEED,
+    schedule_kind: str = "poisson",
+) -> dict:
+    corpus, stats, _ = make_collection()
+    session = LexicalSession(
+        corpus.tokens, corpus.lengths, "ql_lm", k=K, chunk_size=CHUNK, stats=stats
+    )
+    cfg = tune_config.resolve(None)
+    cap = cfg.serve_max_bucket or cfg.serve_max_batch
+    queries = synthetic.make_queries(corpus, n_queries=n_requests, seed=300 + seed)
+    oracle = _oracle_rows(session, queries)
+    _warm_ladder(session, queries, cfg.serve_min_bucket, cap)
+
+    t_cap = _calibrate(session, queries, cap)
+    capacity_qps = cap / t_cap
+    slo_s = (slo_p99_ms / 1e3) if slo_p99_ms is not None else 3.0 * t_cap
+    # bound the admitted backlog to one cap-block's worth of work: worst
+    # queue wait ~= t_cap (SLO/3), leaving the rest of the SLO for the
+    # request's own block and scheduling jitter
+    queue_limit = cap
+    # the policy reacts on the dispatch timescale of this host
+    interval_s = max(t_cap / 2.0, 1e-3)
+
+    if qps_list:
+        points_qps = [(q, q / capacity_qps) for q in qps_list]
+    else:
+        points_qps = [(f * capacity_qps, f) for f in qps_factors]
+
+    make_schedule = poisson_schedule if schedule_kind == "poisson" else burst_schedule
+    points = []
+    for qps, factor in points_qps:
+        schedule = make_schedule(qps, n_requests, seed=seed)
+        point = {"offered_qps": qps, "capacity_factor": factor}
+        for mode in ("static", "adaptive"):
+            result, service, registry, policy = _run_point(
+                session,
+                queries,
+                schedule,
+                adaptive=(mode == "adaptive"),
+                slo_s=slo_s,
+                queue_limit=queue_limit,
+                interval_s=interval_s,
+            )
+            _check_run(result, registry, oracle, policy)
+            point[mode] = _summarize(result, service, registry, policy)
+        point["static_meets_slo"] = point["static"]["p99_ms"] <= slo_s * 1e3
+        point["adaptive_meets_slo"] = point["adaptive"]["p99_ms"] <= slo_s * 1e3
+        points.append(point)
+
+    return {
+        "benchmark": "serve_load",
+        "kind": session.kind,
+        "n_docs": session.n_docs,
+        "k": K,
+        "chunk_size": CHUNK,
+        "schedule": schedule_kind,
+        "seed": seed,
+        "n_requests": n_requests,
+        "calibration": {
+            "cap_block": cap,
+            "t_cap_block_ms": t_cap * 1e3,
+            "capacity_qps": capacity_qps,
+        },
+        "slo_p99_ms": slo_s * 1e3,
+        "queue_limit": queue_limit,
+        "policy_interval_ms": interval_s * 1e3,
+        "points": points,
+    }
+
+
+def _slo_win(payload: dict) -> dict | None:
+    """The headline point: static violates the p99 SLO, adaptive meets it,
+    occupancy no worse (small tolerance)."""
+    for point in payload["points"]:
+        if (
+            not point["static_meets_slo"]
+            and point["adaptive_meets_slo"]
+            and point["adaptive"]["occupancy"] >= point["static"]["occupancy"] - 0.05
+        ):
+            return point
+    return None
+
+
+def run(csv_rows: list):
+    payload = sweep()
+    for point in payload["points"]:
+        f = point["capacity_factor"]
+        for mode in ("static", "adaptive"):
+            s = point[mode]
+            csv_rows.append(
+                (
+                    f"serve_load_{f:.2f}x_{mode}_p99_us",
+                    s["p99_ms"] * 1e3,  # CSV column is us_per_call
+                    f"qps={point['offered_qps']:.0f} shed={s['shed_rate']:.2f} "
+                    f"occ={s['occupancy']:.2f}",
+                )
+            )
+    win = _slo_win(payload)
+    assert win is not None, (
+        "no offered-QPS point where adaptive meets the p99 SLO, static "
+        f"violates it, and occupancy is no worse: {json.dumps(payload['points'])}"
+    )
+    payload["slo_win"] = {
+        "capacity_factor": win["capacity_factor"],
+        "offered_qps": win["offered_qps"],
+        "static_p99_ms": win["static"]["p99_ms"],
+        "adaptive_p99_ms": win["adaptive"]["p99_ms"],
+        "slo_p99_ms": payload["slo_p99_ms"],
+    }
+    csv_rows.append(
+        (
+            "serve_load_slo_win_factor",
+            win["capacity_factor"],
+            f"static_p99={win['static']['p99_ms']:.1f}ms "
+            f"adaptive_p99={win['adaptive']['p99_ms']:.1f}ms "
+            f"slo={payload['slo_p99_ms']:.1f}ms",
+        )
+    )
+    path = write_bench_json(payload, "BENCH_serve_load.json")
+    csv_rows.append(("serve_load_bench_json", float(len(payload["points"])), path))
+    return payload
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-requests", type=int, default=N_REQUESTS)
+    ap.add_argument(
+        "--qps-list", type=float, nargs="*", default=None,
+        help="absolute offered QPS points (default: factors of calibrated capacity)",
+    )
+    ap.add_argument("--slo-p99-ms", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--schedule", choices=("poisson", "burst"), default="poisson")
+    ap.add_argument("--json", default="BENCH_serve_load.json")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="short CI run: invariants only (byte identity, shed accounting, "
+        "zero oscillation violations), no SLO-win assertion",
+    )
+    args = ap.parse_args(argv)
+    if args.smoke:
+        payload = sweep(
+            n_requests=min(args.n_requests, 400),
+            qps_factors=(0.5, 1.5),
+            slo_p99_ms=args.slo_p99_ms,
+            seed=args.seed,
+            schedule_kind=args.schedule,
+        )
+    else:
+        payload = sweep(
+            n_requests=args.n_requests,
+            qps_list=args.qps_list,
+            slo_p99_ms=args.slo_p99_ms,
+            seed=args.seed,
+            schedule_kind=args.schedule,
+        )
+        win = _slo_win(payload)
+        if win is not None:
+            payload["slo_win"] = {
+                "capacity_factor": win["capacity_factor"],
+                "offered_qps": win["offered_qps"],
+                "static_p99_ms": win["static"]["p99_ms"],
+                "adaptive_p99_ms": win["adaptive"]["p99_ms"],
+                "slo_p99_ms": payload["slo_p99_ms"],
+            }
+    path = write_bench_json(payload, args.json)
+    for point in payload["points"]:
+        print(
+            f"{point['capacity_factor']:.2f}x capacity "
+            f"({point['offered_qps']:.0f} qps): "
+            f"static p99 {point['static']['p99_ms']:.1f}ms "
+            f"(shed {point['static']['shed_rate']:.0%}) | "
+            f"adaptive p99 {point['adaptive']['p99_ms']:.1f}ms "
+            f"(shed {point['adaptive']['shed_rate']:.0%}, "
+            f"occ {point['adaptive']['occupancy']:.2f})"
+        )
+    print(f"slo {payload['slo_p99_ms']:.1f}ms -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """Serving driver: thin CLI over the ``repro.serve`` subsystem (or LM decode).
 
     PYTHONPATH=src python -m repro.launch.serve --mode search --n-queries 256
+    PYTHONPATH=src python -m repro.launch.serve --mode search --slo-p99-ms 50
     PYTHONPATH=src python -m repro.launch.serve --mode decode --tokens 32
 
 Search mode runs the paper's system as an online service: queries are
@@ -28,7 +29,12 @@ from repro.obs import Metrics
 from repro.distributed.sharding import rules_for_mesh
 from repro.launch.mesh import make_test_mesh, set_mesh
 from repro.models import transformer as tfm
-from repro.serve import LexicalSession, RetrievalService
+from repro.serve import (
+    AdaptiveBatchPolicy,
+    AdmissionController,
+    LexicalSession,
+    RetrievalService,
+)
 from repro.serve.bench import sweep_batch_sizes, write_bench_json
 
 
@@ -42,6 +48,8 @@ def serve_search(
     scorer: str | None = None,
     sweep_sizes: tuple[int, ...] = (32, 128, 512),
     bench_out: str = "BENCH_serve.json",
+    slo_p99_ms: float | None = None,
+    queue_limit: int = 256,
 ):
     cfg = reduced_config("mirex")
     corpus = synthetic.make_corpus(
@@ -60,19 +68,36 @@ def serve_search(
         stats=stats,
     )
     registry = Metrics()  # this service's own histograms (shutdown summary)
+    policy = admission = None
+    if slo_p99_ms is not None:
+        # closed-loop serving: the adaptive policy re-picks the microbatch
+        # triggers against the p99 SLO, and admission bounds the queue
+        policy = AdaptiveBatchPolicy(slo_p99_s=slo_p99_ms * 1e-3)
+        admission = AdmissionController(queue_limit=queue_limit, on_full="shed")
     service = RetrievalService(
         {"lexical": session},
         max_batch=max_batch or n_queries,
         max_delay=max_delay_ms * 1e-3,
         registry=registry,
+        admission=admission,
+        policy=policy,
     )
 
+    slo_note = f", slo p99 {slo_p99_ms:.0f}ms" if slo_p99_ms is not None else ""
     print(f"== streaming {batches} request waves of {n_queries} queries "
-          f"(corpus: {session.n_docs} docs, scorer {session.scorer.name}, k={session.k}) ==")
+          f"(corpus: {session.n_docs} docs, scorer {session.scorer.name}, "
+          f"k={session.k}{slo_note}) ==")
+    n_shed = 0
     for b in range(batches):
         queries = synthetic.make_queries(corpus, n_queries=n_queries, seed=10 + b)
         n_seen = len(service.metrics)
-        rids = [service.submit(q, "lexical") for q in queries]
+        rids = []
+        for q in queries:
+            outcome = service.try_submit(q, "lexical")
+            if outcome.admitted:
+                rids.append(outcome.rid)
+            else:
+                n_shed += 1
         results = service.poll()
         results.update(service.drain())  # deadline not yet due -> flush the tail
         assert len(results) == len(rids)
@@ -103,6 +128,18 @@ def serve_search(
                 f"p99={h['p99'] * scale:8.2f}{unit}  "
                 f"max={h['max'] * scale:8.2f}{unit}"
             )
+    if policy is not None:
+        d = policy.describe()
+        print(
+            f"== adaptive policy: {d['adjustments']} adjustments, "
+            f"{d['flips']} flips, {d['damped']} damped, "
+            f"{d['oscillation_violations']} oscillation violations; "
+            f"effective knobs {d['effective']} =="
+        )
+        print(
+            f"   admitted {summary['counters'].get('serve.admitted', 0)}, "
+            f"shed {n_shed} (queue_limit {queue_limit})"
+        )
 
     print(f"== C1 sweep: batch sizes {sweep_sizes} ==")
     payload = sweep_batch_sizes(
@@ -153,6 +190,11 @@ def main():
     ap.add_argument("--sweep-sizes", type=int, nargs="+", default=[32, 128, 512],
                     help="batch sizes for the C1 latency sweep")
     ap.add_argument("--bench-out", default="BENCH_serve.json")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="enable the adaptive serving loop: hold request p99 "
+                    "to this SLO (closed-loop microbatch control + admission)")
+    ap.add_argument("--queue-limit", type=int, default=256,
+                    help="admission queue bound when --slo-p99-ms is set")
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--arch", default="gemma2-2b")
     args = ap.parse_args()
@@ -166,6 +208,8 @@ def main():
             scorer=args.scorer,
             sweep_sizes=tuple(args.sweep_sizes),
             bench_out=args.bench_out,
+            slo_p99_ms=args.slo_p99_ms,
+            queue_limit=args.queue_limit,
         )
     else:
         serve_decode(args.tokens, args.arch)

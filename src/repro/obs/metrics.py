@@ -6,7 +6,10 @@ a *timeline*, this module keeps *aggregates* — monotone counters
 buffer occupancy), and fixed-bucket histograms with quantile readout
 (p50/p95/p99 of serve queue-wait, batch size, checkpoint-save duration).
 The serve layer's histograms are the live latency/QPS surface the
-ROADMAP's SLO-driven adaptive microbatching will consume.
+SLO-driven adaptive microbatch policy (`repro.serve.policy`) consumes;
+for that consumer histograms also offer a *windowed-decay* mode (a ring
+of fixed-time sub-windows) so the policy reads recent quantiles rather
+than the run-lifetime distribution.
 
 Histograms are *fixed-bucket* on purpose: observation cost is a bisect +
 one increment under a per-instrument lock (no reservoir, no sort at
@@ -27,7 +30,8 @@ from __future__ import annotations
 
 import bisect
 import threading
-from typing import Sequence
+import time
+from typing import Callable, Sequence
 
 __all__ = ["Counter", "Gauge", "Histogram", "Metrics", "latency_buckets"]
 
@@ -107,6 +111,25 @@ class Gauge:
         return {"value": self._value, "max": self._max}
 
 
+class _Window:
+    """One sub-window of a windowed histogram: a full bucket-count vector
+    plus its own n/sum/min/max so aggregates merge exactly."""
+
+    __slots__ = ("counts", "n", "sum", "min", "max")
+
+    def __init__(self, n_buckets: int):
+        self.counts = [0] * n_buckets
+        self.clear()
+
+    def clear(self) -> None:
+        for i in range(len(self.counts)):
+            self.counts[i] = 0
+        self.n = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+
 class Histogram:
     """Fixed-bucket histogram with interpolated quantile readout.
 
@@ -115,11 +138,35 @@ class Histogram:
     increment under the instrument lock; ``quantile`` interpolates
     linearly within the crossing bucket (clamped to the observed min/max,
     so a one-element histogram reads back that element exactly).
+
+    **Windowed-decay mode** (``window_s`` set): instead of one cumulative
+    count vector, the histogram keeps a ring of ``n_windows`` fixed-time
+    sub-windows spanning ``window_s`` seconds in total. Observations land
+    in the current sub-window; as the injected ``clock`` advances past a
+    sub-window boundary the ring rotates, dropping the oldest sub-window —
+    so every readout (count/quantile/summary) reflects only roughly the
+    last ``window_s`` seconds. This is the surface the serve layer's
+    adaptive policy reads: *recent* p99, not the run-lifetime distribution.
+    The default (``window_s=None``) stays cumulative. A clock that reads
+    earlier than the current sub-window start (injected test clocks may be
+    stamped backwards) never rotates — observations just land in the
+    current sub-window.
     """
 
-    __slots__ = ("name", "bounds", "_lock", "_counts", "_n", "_sum", "_min", "_max")
+    __slots__ = (
+        "name", "bounds", "_lock", "_counts", "_n", "_sum", "_min", "_max",
+        "window_s", "_clock", "_wins", "_win_idx", "_win_start", "_sub",
+    )
 
-    def __init__(self, name: str, bounds: Sequence[float] | None = None):
+    def __init__(
+        self,
+        name: str,
+        bounds: Sequence[float] | None = None,
+        *,
+        window_s: float | None = None,
+        n_windows: int = 8,
+        clock: Callable[[], float] | None = None,
+    ):
         self.name = name
         self.bounds = tuple(bounds) if bounds is not None else latency_buckets()
         if not self.bounds or list(self.bounds) != sorted(set(self.bounds)):
@@ -130,10 +177,51 @@ class Histogram:
         self._sum = 0.0
         self._min = float("inf")
         self._max = float("-inf")
+        self.window_s = window_s
+        if window_s is not None:
+            if window_s <= 0:
+                raise ValueError(f"window_s must be positive, got {window_s}")
+            if not isinstance(n_windows, int) or n_windows < 1:
+                raise ValueError(f"n_windows must be a positive int, got {n_windows}")
+            self._clock = clock if clock is not None else time.monotonic
+            self._sub = window_s / n_windows
+            self._wins = [_Window(len(self.bounds) + 1) for _ in range(n_windows)]
+            self._win_idx = 0
+            self._win_start = self._clock()
+        else:
+            self._clock = None
+            self._wins = None
+
+    def _rotate(self) -> None:
+        """Advance the ring to the clock's current sub-window (lock held).
+        A gap longer than the whole window clears every sub-window."""
+        now = self._clock()
+        if now < self._win_start + self._sub:
+            return  # still inside the current sub-window (or clock rewound)
+        k = int((now - self._win_start) // self._sub)
+        if k >= len(self._wins):
+            for w in self._wins:
+                w.clear()
+        else:
+            for _ in range(k):
+                self._win_idx = (self._win_idx + 1) % len(self._wins)
+                self._wins[self._win_idx].clear()
+        self._win_start += k * self._sub
 
     def observe(self, value: float) -> None:
         i = bisect.bisect_left(self.bounds, value)
         with self._lock:
+            if self._wins is not None:
+                self._rotate()
+                w = self._wins[self._win_idx]
+                w.counts[i] += 1
+                w.n += 1
+                w.sum += value
+                if value < w.min:
+                    w.min = value
+                if value > w.max:
+                    w.max = value
+                return
             self._counts[i] += 1
             self._n += 1
             self._sum += value
@@ -142,53 +230,91 @@ class Histogram:
             if value > self._max:
                 self._max = value
 
+    def _agg(self) -> tuple[list[int], int, float, float, float]:
+        """(counts, n, sum, min, max) over the live data (lock held):
+        the cumulative fields, or the merged ring in windowed mode."""
+        if self._wins is None:
+            return self._counts, self._n, self._sum, self._min, self._max
+        self._rotate()
+        counts = [0] * (len(self.bounds) + 1)
+        n, s = 0, 0.0
+        mn, mx = float("inf"), float("-inf")
+        for w in self._wins:
+            if not w.n:
+                continue
+            for i, c in enumerate(w.counts):
+                counts[i] += c
+            n += w.n
+            s += w.sum
+            mn = min(mn, w.min)
+            mx = max(mx, w.max)
+        return counts, n, s, mn, mx
+
     @property
     def count(self) -> int:
-        return self._n
+        with self._lock:
+            return self._agg()[1]
 
     @property
     def sum(self) -> float:
-        return self._sum
+        with self._lock:
+            return self._agg()[2]
 
     @property
     def mean(self) -> float:
-        return self._sum / self._n if self._n else 0.0
+        with self._lock:
+            _, n, s, _, _ = self._agg()
+        return s / n if n else 0.0
+
+    def _quantile_from(
+        self, counts: Sequence[int], n: int, mn: float, mx: float, q: float
+    ) -> float:
+        rank = q * n
+        cum = 0
+        for i, c in enumerate(counts):
+            if c == 0:
+                continue
+            if cum + c >= rank:
+                lo = self.bounds[i - 1] if i > 0 else min(mn, self.bounds[0])
+                hi = self.bounds[i] if i < len(self.bounds) else mx
+                frac = (rank - cum) / c
+                val = lo + (hi - lo) * max(0.0, min(1.0, frac))
+                # never report outside the observed range
+                return max(mn, min(mx, val))
+            cum += c
+        return mx  # pragma: no cover — rank <= n always crosses
 
     def quantile(self, q: float) -> float:
         """Interpolated quantile in [0, 1]; 0.0 on an empty histogram."""
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile must be in [0, 1], got {q}")
         with self._lock:
-            if self._n == 0:
+            counts, n, _, mn, mx = self._agg()
+            if n == 0:
                 return 0.0
-            rank = q * self._n
-            cum = 0
-            for i, c in enumerate(self._counts):
-                if c == 0:
-                    continue
-                if cum + c >= rank:
-                    lo = self.bounds[i - 1] if i > 0 else min(self._min, self.bounds[0])
-                    hi = self.bounds[i] if i < len(self.bounds) else self._max
-                    frac = (rank - cum) / c
-                    val = lo + (hi - lo) * max(0.0, min(1.0, frac))
-                    # never report outside the observed range
-                    return max(self._min, min(self._max, val))
-                cum += c
-            return self._max  # pragma: no cover — rank <= n always crosses
+            return self._quantile_from(counts, n, mn, mx, q)
 
     def summary(self) -> dict:
         """The rollup exported into reports: count/mean/min/max + p50/95/99."""
-        if self._n == 0:
-            return {"count": 0}
-        return {
-            "count": self._n,
-            "mean": self.mean,
-            "min": self._min,
-            "max": self._max,
-            "p50": self.quantile(0.50),
-            "p95": self.quantile(0.95),
-            "p99": self.quantile(0.99),
-        }
+        with self._lock:
+            counts, n, s, mn, mx = self._agg()
+            if n == 0:
+                out = {"count": 0}
+                if self.window_s is not None:
+                    out["window_s"] = self.window_s
+                return out
+            out = {
+                "count": n,
+                "mean": s / n,
+                "min": mn,
+                "max": mx,
+                "p50": self._quantile_from(counts, n, mn, mx, 0.50),
+                "p95": self._quantile_from(counts, n, mn, mx, 0.95),
+                "p99": self._quantile_from(counts, n, mn, mx, 0.99),
+            }
+        if self.window_s is not None:
+            out["window_s"] = self.window_s
+        return out
 
     describe = summary
 
@@ -223,8 +349,25 @@ class Metrics:
     def gauge(self, name: str) -> Gauge:
         return self._get(name, Gauge, lambda: Gauge(name))
 
-    def histogram(self, name: str, bounds: Sequence[float] | None = None) -> Histogram:
-        return self._get(name, Histogram, lambda: Histogram(name, bounds))
+    def histogram(
+        self,
+        name: str,
+        bounds: Sequence[float] | None = None,
+        *,
+        window_s: float | None = None,
+        n_windows: int = 8,
+        clock: Callable[[], float] | None = None,
+    ) -> Histogram:
+        """Get-or-create; creation kwargs (bounds, windowing, clock) apply
+        on first creation only — later lookups return the existing
+        instrument unchanged (same contract as ``bounds`` always had)."""
+        return self._get(
+            name,
+            Histogram,
+            lambda: Histogram(
+                name, bounds, window_s=window_s, n_windows=n_windows, clock=clock
+            ),
+        )
 
     def names(self) -> list[str]:
         with self._lock:

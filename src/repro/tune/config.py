@@ -40,7 +40,7 @@ import contextlib
 
 # Bump when knobs are added/removed/re-meaning-ed: persisted winner-cache
 # entries recorded under another version are stale and fall back to defaults.
-SPACE_VERSION = 1
+SPACE_VERSION = 2  # v2: + serve_max_bucket (microbatch bucket-ladder cap)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +53,10 @@ class TuningConfig:
     ``dense_block_d`` follow ``chunk_size`` on the scan paths (today's
     behavior of passing ``block_d=chunk_size`` into the kernels) and the
     kernels' native defaults (512 / 1024) on direct calls, ``max_workers``
-    defers to one-worker-per-device.
+    defers to one-worker-per-device. ``serve_max_bucket=None`` means an
+    uncapped bucket ladder (its default is a *cap*, 128 — the measured
+    serve sweet spot; capping only regroups dispatches, so results stay
+    byte-identical and the identity contract is on bytes, not grouping).
     """
 
     # -- scan fold / pipelined executor (cluster.job / core.pipeline) -------
@@ -79,10 +82,16 @@ class TuningConfig:
     serve_max_batch: int = 64
     serve_max_delay_s: float = 5e-3
     serve_min_bucket: int = 8
+    # bucket-ladder cap: blocks never pad past this, and oversize takes are
+    # split into <= cap dispatches (the @256 amortization-cliff fix — past
+    # the MXU/cache sweet spot per-query cost *rises*, so two sweet-spot
+    # scans beat one giant one). None = uncapped (the pre-cap ladder).
+    serve_max_bucket: int | None = 128
 
     def __post_init__(self):
         for name in (
             "chunk_size", "lex_block_d", "dense_block_d", "max_workers",
+            "serve_max_bucket",
         ):
             v = getattr(self, name)
             if v is not None and (not isinstance(v, int) or v < 1):
@@ -99,6 +108,14 @@ class TuningConfig:
             v = getattr(self, name)
             if not isinstance(v, (int, float)) or v < 0:
                 raise ValueError(f"{name} must be a non-negative number, got {v!r}")
+        if (
+            self.serve_max_bucket is not None
+            and self.serve_max_bucket < self.serve_min_bucket
+        ):
+            raise ValueError(
+                f"serve_max_bucket {self.serve_max_bucket} below "
+                f"serve_min_bucket {self.serve_min_bucket}"
+            )
 
     # -- derivation ---------------------------------------------------------
 

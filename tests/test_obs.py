@@ -481,3 +481,78 @@ def test_legacy_warning_points_at_caller_run_experiment(tmp_path):
     # the alias reached the job as a real FaultSpec: it fired and was retried
     assert [f["kind"] for f in report["job"]["faults_fired"]] == ["crash"]
     assert report["job"]["scheduler"]["retries"] == 1
+
+
+# -- windowed (recent-decay) histograms --------------------------------------
+
+
+class ManualClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_windowed_histogram_forgets_old_samples():
+    clock = ManualClock()
+    h = Histogram("h", bounds=(1.0, 10.0), window_s=1.0, n_windows=4, clock=clock)
+    h.observe(100.0)  # lands in the current sub-window
+    assert h.count == 1 and h.quantile(0.99) == 100.0
+    clock.t = 0.9  # still inside the ring
+    h.observe(0.5)
+    assert h.count == 2
+    clock.t = 1.3  # first sub-window (0.0-0.25) rotated out -> 100.0 gone
+    assert h.count == 1
+    assert h.quantile(0.99) == pytest.approx(0.5)
+    clock.t = 5.0  # a gap longer than the whole window clears everything
+    assert h.count == 0
+    assert h.summary()["window_s"] == 1.0
+
+
+def test_windowed_histogram_rotation_edges():
+    clock = ManualClock()
+    h = Histogram("h", bounds=(1.0,), window_s=1.0, n_windows=4, clock=clock)
+    # one sample per sub-window boundary; each rotation drops exactly one
+    for i in range(4):
+        clock.t = i * 0.25
+        h.observe(float(i))
+    assert h.count == 4
+    clock.t = 1.0  # rotates out the [0, 0.25) sub-window only
+    assert h.count == 3
+    clock.t = 1.25
+    assert h.count == 2
+    # min/max/quantiles come from the merged live sub-windows
+    assert h.summary()["max"] == 3.0 and h.summary()["min"] == 2.0
+
+
+def test_windowed_histogram_tolerates_clock_rewind():
+    """Arrival stamping in the open-loop load generator rewinds the service
+    clock; a rewound read must not rotate (or crash) — it observes into the
+    current sub-window."""
+    clock = ManualClock(5.0)
+    h = Histogram("h", bounds=(1.0,), window_s=2.0, n_windows=4, clock=clock)
+    h.observe(1.0)
+    clock.t = 3.0  # rewind
+    h.observe(2.0)
+    assert h.count == 2
+    clock.t = 5.4  # forward again, still same sub-window (0.5s each)
+    assert h.count == 2
+
+
+def test_cumulative_histogram_unchanged_by_default():
+    h = Histogram("h", bounds=(1.0, 2.0))
+    for v in (0.5, 1.5, 3.0):
+        h.observe(v)
+    assert h.count == 3 and h.summary().get("window_s") is None
+
+
+def test_registry_creates_windowed_histogram_once():
+    clock = ManualClock()
+    m = Metrics()
+    h1 = m.histogram("serve.recent", window_s=1.0, n_windows=2, clock=clock)
+    h2 = m.histogram("serve.recent")  # get: kwargs only apply at creation
+    assert h1 is h2 and h1.window_s == 1.0
+    h1.observe(1.0)
+    clock.t = 3.0
+    assert h2.count == 0  # decayed through the shared instance
