@@ -43,6 +43,7 @@ import numpy as np
 from benchmarks import common
 from repro import tune
 from repro.cluster.job import run_sharded_scan_job
+from repro.core import packing
 from repro.experiments import grid as exp_grid
 from repro.experiments import runner
 from repro.serve.service import RetrievalService
@@ -97,6 +98,19 @@ def _scan_target(
     scorers = spec.scorers()
     shards = max(1, spec.n_shards)
     per_shard = spec.n_docs // shards
+    lexical = all(getattr(s, "kind", None) == "lexical" for s in scorers)
+
+    # packed corpus representations, built once per resolved width — the
+    # knob changes which representation the trial streams, not the corpus
+    _packed_cache: dict = {"none": docs}
+
+    def docs_for(cfg: TuningConfig):
+        mode = cfg.token_pack if lexical else "none"
+        if mode not in _packed_cache:
+            _packed_cache[mode] = packing.pack_corpus(
+                docs[0], docs[1], vocab=spec.vocab, mode=mode
+            )
+        return _packed_cache[mode]
 
     def legal(cfg: TuningConfig) -> bool:
         # only chunks that actually apply: a knob the job would ignore is a
@@ -110,6 +124,7 @@ def _scan_target(
         knobs=(
             Knob("chunk_size", chunk_values),
             Knob("prefetch_depth", prefetch_values),
+            Knob("token_pack", ("none", "auto", "bitpack") if lexical else ("none",)),
         ),
         constraint=legal,
     )
@@ -117,7 +132,7 @@ def _scan_target(
     def run_job(cfg: TuningConfig):
         return run_sharded_scan_job(
             queries,
-            docs,
+            docs_for(cfg),
             scorers,
             k=spec.k,
             chunk_size=_effective_chunk(

@@ -22,6 +22,7 @@ MODULES = (
     "serve_latency",
     "experiments_amortization",
     "sharded_scan",
+    "packed_scan",
     "pipeline_scan",
     "autotune",
     "serve_load",

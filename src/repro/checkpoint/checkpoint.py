@@ -61,6 +61,7 @@ def save(ckpt_dir: str, step: int, tree, *, on_commit=None) -> str:
         os.makedirs(tmp, exist_ok=True)
         named, _ = _flatten(tree)
         manifest = []
+        written = 0
         for i, (key, leaf) in enumerate(named):
             arr = np.asarray(jax.device_get(leaf))
             true_dtype = str(arr.dtype)
@@ -68,6 +69,7 @@ def save(ckpt_dir: str, step: int, tree, *, on_commit=None) -> str:
                 arr = arr.view(_VIEW_AS[true_dtype])
             fname = f"leaf_{i:05d}.npy"
             np.save(os.path.join(tmp, fname), arr)
+            written += arr.nbytes
             manifest.append({"key": key, "file": fname, "shape": list(arr.shape), "dtype": true_dtype})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "leaves": manifest}, f)
@@ -81,6 +83,10 @@ def save(ckpt_dir: str, step: int, tree, *, on_commit=None) -> str:
         met = obs.metrics()
         met.histogram("ckpt.rename_s").observe(time.monotonic() - t_rename)
         met.histogram("ckpt.save_s").observe(time.monotonic() - t_save)
+        # array payload only (manifest.json excluded): the packed-corpus
+        # contract is "bytes moved, never bytes written" — state checkpoints
+        # are pack-invariant, so this counter is how traces prove it
+        met.counter("ckpt.written_bytes").inc(written)
     return final
 
 

@@ -75,6 +75,12 @@ def pad_leading(tree: Pytree, n_target: int, pad_values: Pytree | None = None) -
     return jax.tree.map(_pad, tree, pad_values)
 
 
+def _tree_nbytes(tree: Pytree) -> int:
+    """Array bytes across a pytree's leaves (the staged-traffic counter's
+    unit — packed segments stage fewer bytes for the same rows)."""
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree) if hasattr(leaf, "nbytes"))
+
+
 def prefetch_segments(
     data: Pytree,
     segments: Sequence[tuple[int, int]],
@@ -108,6 +114,7 @@ def prefetch_segments(
     if depth < 1:
         raise ValueError(f"prefetch depth must be >= 1, got {depth}")
     segments = list(segments)
+    staged_bytes = obs.metrics().counter("pipeline.staged_bytes")
     if len(segments) <= 1:
         # nothing to overlap with — skip the worker thread (a fully-resumed
         # job streams zero segments; a one-segment shard streams inline)
@@ -115,6 +122,7 @@ def prefetch_segments(
             if cancel is not None and cancel.is_set():
                 return
             seg = jax.tree.map(lambda x: x[a:b], data)
+            staged_bytes.inc(_tree_nbytes(seg))
             yield seg if device is None else jax.device_put(seg, device)
         return
     q: queue_mod.Queue = queue_mod.Queue(maxsize=depth)
@@ -144,6 +152,7 @@ def prefetch_segments(
                 # segment i while the consumer folds segment i-1
                 with tr.span("prefetch.stage", "pipeline", segment_pos=i, rows=b - a):
                     seg = jax.tree.map(lambda x: x[a:b], data)
+                    staged_bytes.inc(_tree_nbytes(seg))
                     if device is not None:
                         seg = jax.device_put(seg, device)
                 if not _put(seg):

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.core import pipeline, scoring, topk
+from repro.core import packing, pipeline, scoring, topk
 from repro.core.scoring import CollectionStats, Scorer
 from repro.tune import config as tune_config
 from repro.tune.config import TuningConfig
@@ -97,6 +97,8 @@ def search_local(
     chunk_ids = jnp.arange(chunk_size, dtype=jnp.int32)
 
     def fold(state, chunk, start):
+        if isinstance(chunk, packing.PackedCorpus):
+            chunk = chunk.unpack()  # mirrored decode: host parity with kernel
         scores = scorer.score_block(queries, chunk, stats)  # [n_q, chunk_size]
         ids = offset + start + chunk_ids
         return topk.update(state, scores, jnp.broadcast_to(ids, scores.shape))
@@ -163,12 +165,15 @@ def search_local_multi(
         from repro.kernels import ops  # local import: kernels are optional
 
         cfg = tune_config.resolve(tuning)
-        d_tokens, d_len = docs
+        if isinstance(docs, packing.PackedCorpus):
+            d_tokens, d_len, pack_spec = docs.tokens, docs.lengths, docs.spec
+        else:
+            (d_tokens, d_len), pack_spec = docs, None
         modes, weights, ab = scoring.lexical_epilogues(scorers, queries, stats)
         scores, ids = ops.lexical_scan_topk(
             queries, weights, ab, d_tokens, d_len, modes=modes, k=k,
             block_d=cfg.lex_block(chunk_size, d_tokens.shape[0]),
-            tile_d=cfg.lex_tile_d,
+            tile_d=cfg.lex_tile_d, pack_spec=pack_spec,
         )
         state = topk.TopKState(scores=scores, ids=_offset_ids(ids, doc_id_offset))
         if init_state is not None:
@@ -184,6 +189,8 @@ def search_local_multi(
     def fold(state, chunk, start):
         tf = None
         if kind == "lexical":
+            if isinstance(chunk, packing.PackedCorpus):
+                chunk = chunk.unpack()  # mirrored decode: parity with kernel
             d_tokens, _ = chunk
             tf = scoring.term_frequencies(queries, d_tokens)  # shared by the grid
         scores = jnp.stack(

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro import obs, tune
 from repro.cluster import FaultSchedule, plan_shards, run_sharded_scan_job
-from repro.core import anchors, topk
+from repro.core import anchors, packing, topk
 from repro.data import synthetic
 from repro.eval import evaluate_run, paired_randomization_test, trec
 from repro.experiments.grid import ExperimentSpec
@@ -230,6 +230,20 @@ def _run_experiment_traced(
         )
     scorers = spec.scorers()
     docs = (jnp.asarray(coll.corpus.tokens), jnp.asarray(coll.corpus.lengths))
+    # pack on the producer: token segments shrink to the tuned width here,
+    # before sharding/staging, and every consumer decodes exactly — run
+    # files stay byte-identical to the unpacked oracle (the pack contract)
+    pack_resolved = "none"
+    if cfg.token_pack != "none" and all(s.kind == "lexical" for s in scorers):
+        packed = packing.pack_corpus(
+            np.asarray(coll.corpus.tokens),
+            np.asarray(coll.corpus.lengths),
+            vocab=spec.vocab,
+            mode=cfg.token_pack,
+        )
+        if isinstance(packed, packing.PackedCorpus):
+            pack_resolved = packed.spec.mode
+            docs = jax.tree.map(jnp.asarray, packed)
 
     # the tuned chunk replaces the spec's *for the scan fold only* (stats
     # preparation keeps the declared chunking — stats bytes depend on it);
@@ -344,6 +358,8 @@ def _run_experiment_traced(
                 "cache_hit": cache_hit,
                 "overrides": cfg.overrides(),
                 "chunk_size": chunk,
+                "token_pack": cfg.token_pack,
+                "pack_resolved": pack_resolved,
             },
             "obs": obs_block,
             "shards": [

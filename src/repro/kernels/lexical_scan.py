@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import packing
 from repro.core.pipeline import next_pow2
 from repro.core.scoring import PAD_TOKEN, EpilogueMode, LexicalEpilogue
 from repro.core.scoring import apply_epilogue
@@ -71,7 +72,7 @@ def _lexical_scan_kernel(
     q_ref,  # [n_q, L_q] int32 — resident (pads remapped to PAD_TOKEN - 1)
     w_ref,  # [n_models, n_q, L_q] f32 — resident weight tables
     ab_ref,  # [n_models, 2] f32 — resident (alpha, beta) per model
-    d_ref,  # [block_d, L_d] int32 — this step's stream tile
+    d_ref,  # [block_d, L_d] int32 — or packed [block_d, W] when pack_spec
     dlen_ref,  # [1, block_d] int32 — this step's doc lengths
     out_s_ref,  # [n_models, n_q, k] f32 — resident top-k scores
     out_i_ref,  # [n_models, n_q, k] int32 — resident top-k ids
@@ -80,6 +81,8 @@ def _lexical_scan_kernel(
     block_d: int,
     k: int,
     tile_d: int,
+    pack_spec: packing.PackSpec | None = None,
+    l_dec: int = 0,
 ):
     step = pl.program_id(0)
 
@@ -90,6 +93,13 @@ def _lexical_scan_kernel(
 
     q = q_ref[...]
     d = d_ref[...]
+    if pack_spec is not None:
+        # decode the packed tile in VMEM right before the tf sub-tile loop:
+        # the stream tile stays `pack_spec.packed_width` wide in HBM and the
+        # int32 [block_d, L_d] view only ever exists on-chip. `l_dec` is the
+        # tile_d-aligned unpacked width (same PAD_TOKEN fill as the unpacked
+        # wrapper path), so the tf reduction below is identical either way.
+        d = packing.unpack_tokens(d, pack_spec, pad_to=l_dec)
     dlen = dlen_ref[0, :]  # [block_d]
     tf = _block_term_frequencies(q, d, tile_d=tile_d)  # shared by the grid
 
@@ -116,7 +126,7 @@ def lexical_scan_topk_pallas(
     q_tokens: jax.Array,  # [n_q, L_q] int32, PAD_TOKEN-padded
     weights: jax.Array,  # [n_models, n_q, L_q] f32
     ab: jax.Array,  # [n_models, 2] f32
-    d_tokens: jax.Array,  # [n_d, L_d] int32, PAD_TOKEN-padded
+    d_tokens: jax.Array,  # [n_d, L_d] int32, PAD_TOKEN-padded — or packed [n_d, W]
     d_len: jax.Array,  # [n_d] int32
     *,
     modes: tuple[EpilogueMode, ...],
@@ -124,14 +134,21 @@ def lexical_scan_topk_pallas(
     block_d: int = 512,
     tile_d: int = 16,
     interpret: bool = True,
+    pack_spec: packing.PackSpec | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused multi-model lexical scan -> ``(scores, ids) [n_models, n_q, k]``.
 
     Ids are block-local (0-based over ``n_d``); empty slots carry the
     ``(-inf, -1)`` sentinels of `topk.TopKState`.
+
+    With ``pack_spec``, ``d_tokens`` is the packed matrix from
+    `packing.pack_tokens` — the stream tile is ``pack_spec.packed_width``
+    columns instead of ``L_d`` (1/4 to 1/2 the HBM traffic) and each tile is
+    decoded in VMEM before the tf loop. The decode is exact, so results are
+    bit-identical to the unpacked call.
     """
     n_q, l_q = q_tokens.shape
-    n_d, l_d = d_tokens.shape
+    n_d = d_tokens.shape[0]
     n_models = weights.shape[0]
     if len(modes) != n_models:
         raise ValueError(f"{len(modes)} modes for {n_models} weight tables")
@@ -140,12 +157,25 @@ def lexical_scan_topk_pallas(
     # query pads -> a token that matches nothing (doc pads are PAD_TOKEN,
     # real tokens >= 0), replacing the doc-side validity mask
     q_safe = jnp.where(q_tokens == PAD_TOKEN, jnp.int32(PAD_TOKEN - 1), q_tokens)
-    pad = (-l_d) % tile_d
-    if pad:
-        d_tokens = jnp.pad(d_tokens, ((0, 0), (0, pad)), constant_values=PAD_TOKEN)
-        l_d += pad
+    if pack_spec is not None:
+        if d_tokens.shape[1] != pack_spec.packed_width:
+            raise ValueError(
+                f"packed width {d_tokens.shape[1]} != spec {pack_spec.packed_width}"
+            )
+        l_d = d_tokens.shape[1]  # streamed width: the packed one
+        l_dec = pack_spec.length + (-pack_spec.length) % tile_d
+    else:
+        l_d = d_tokens.shape[1]
+        l_dec = 0
+        pad = (-l_d) % tile_d
+        if pad:
+            d_tokens = jnp.pad(
+                d_tokens, ((0, 0), (0, pad)), constant_values=PAD_TOKEN
+            )
+            l_d += pad
     kernel = functools.partial(
-        _lexical_scan_kernel, modes=modes, block_d=block_d, k=k, tile_d=tile_d
+        _lexical_scan_kernel, modes=modes, block_d=block_d, k=k, tile_d=tile_d,
+        pack_spec=pack_spec, l_dec=l_dec,
     )
     return pl.pallas_call(
         kernel,

@@ -194,6 +194,13 @@ def main():
                     help="run under an explicit TuningConfig JSON file "
                          "(flat knob dict, see repro.tune.save); mutually "
                          "exclusive with --tune")
+    ap.add_argument("--token-pack", default=None,
+                    choices=["none", "auto", "8", "16", "bitpack"],
+                    help="packed corpus segments (core.packing): store scan "
+                         "tokens at this width and decode on the consumer — "
+                         "fewer bytes staged/streamed, run files byte-"
+                         "identical to the unpacked run. Overrides the "
+                         "tuning config's token_pack knob")
     ap.add_argument("--bench", action="store_true",
                     help="also sweep the models-per-pass amortization curve")
     ap.add_argument("--bench-sizes", type=int, nargs="+", default=[1, 2, 4, 8])
@@ -227,6 +234,12 @@ def main():
     if args.tune and args.tuning_config:
         raise SystemExit("--tune and --tuning-config are mutually exclusive")
     tuning = tune.load(args.tuning_config) if args.tuning_config else None
+    if args.token_pack is not None:
+        if args.tune:
+            raise SystemExit("--token-pack and --tune are mutually exclusive "
+                             "(the cached winner already fixes token_pack)")
+        base = tuning if tuning is not None else tune.TuningConfig()
+        tuning = base.replace(token_pack=args.token_pack)
 
     coll = runner.prepare_collection(spec, seed=args.seed)  # shared with --bench
     report = runner.run_experiment(

@@ -20,8 +20,34 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import cluster
-from repro.core import anchors, scan, topk
+from repro.core import anchors, packing, scan, topk
 from repro.core.scoring import PAD_TOKEN, CollectionStats, Scorer, get_scorer
+from repro.tune import config as tune_config
+
+
+def _pack_resident(tokens, lengths, *, vocab: int | None, mode: str | None):
+    """Resolve the resident corpus representation for a lexical session.
+
+    ``mode=None`` follows the active tuning's ``token_pack`` knob. Returns
+    the plain int32 ``(tokens, lengths)`` tuple, or a ``PackedCorpus``
+    whose device arrays hold the narrow representation — resident HBM drops
+    by the pack ratio, so bigger corpora fit resident, and the scan decodes
+    per chunk/tile with bit-identical results. Packing needs the vocab
+    (for the sentinel); without one we stay unpacked rather than fail.
+    """
+    if mode is None:
+        mode = tune_config.active().config.token_pack
+    t32 = jnp.asarray(tokens, jnp.int32)
+    l32 = jnp.asarray(lengths, jnp.int32)
+    if mode == "none" or vocab is None:
+        return (t32, l32)
+    packed = packing.pack_corpus(
+        np.asarray(tokens, np.int32), np.asarray(lengths, np.int32),
+        vocab=vocab, mode=mode,
+    )
+    if not isinstance(packed, packing.PackedCorpus):
+        return (t32, l32)
+    return jax.tree.map(jnp.asarray, packed)
 
 
 class LexicalSession:
@@ -51,6 +77,7 @@ class LexicalSession:
         stats: CollectionStats | None = None,
         vocab: int | None = None,
         use_kernel: bool | None = None,
+        token_pack: str | None = None,
     ):
         self.scorer = get_scorer(scorer) if isinstance(scorer, str) else scorer
         if self.scorer.kind != "lexical":
@@ -58,22 +85,30 @@ class LexicalSession:
         self.use_kernel = use_kernel  # None = auto-resolve at each (re)trace
         self.k = k
         self.chunk_size = chunk_size
-        self._tokens = jnp.asarray(tokens, jnp.int32)
+        tokens32 = jnp.asarray(tokens, jnp.int32)
         self._lengths = jnp.asarray(lengths, jnp.int32)
-        if self._tokens.shape[0] % chunk_size:
+        if tokens32.shape[0] % chunk_size:
             raise ValueError(
-                f"{self._tokens.shape[0]} docs not divisible by chunk {chunk_size}"
+                f"{tokens32.shape[0]} docs not divisible by chunk {chunk_size}"
             )
         if stats is None:
             if vocab is None:
                 raise ValueError("need stats or vocab to derive collection statistics")
             stats = anchors.collection_stats(
-                self._tokens, self._lengths, vocab=vocab, chunk_size=chunk_size
+                tokens32, self._lengths, vocab=vocab, chunk_size=chunk_size
             )
         self._stats = jax.tree.map(jnp.asarray, stats)
+        # the resident corpus: packed when the knob (argument or active
+        # tuning) says so — the int32 matrix then never stays on device,
+        # only the narrow representation does. Stats above were computed
+        # from the raw tokens, pack-invariantly. The sentinel needs the
+        # vocab; derive it from the stats' cf table when not passed.
+        if vocab is None:
+            vocab = int(self._stats.cf.shape[0])
+        self._docs = _pack_resident(tokens, lengths, vocab=vocab, mode=token_pack)
 
         scorer_, k_, chunk_ = self.scorer, k, chunk_size
-        docs, st = (self._tokens, self._lengths), self._stats
+        docs, st = self._docs, self._stats
 
         @jax.jit
         def _handle(q):
@@ -92,7 +127,19 @@ class LexicalSession:
 
     @property
     def n_docs(self) -> int:
-        return int(self._tokens.shape[0])
+        return int(self._lengths.shape[0])
+
+    @property
+    def pack_mode(self) -> str:
+        """Resolved resident storage: ``none`` or the PackSpec mode."""
+        if isinstance(self._docs, packing.PackedCorpus):
+            return self._docs.spec.mode
+        return "none"
+
+    @property
+    def resident_corpus_bytes(self) -> int:
+        """Device bytes held by the resident corpus (tokens + lengths)."""
+        return packing.tree_nbytes(self._docs)
 
     def search(self, q_block: np.ndarray) -> topk.TopKState:
         """Scan one padded query block; blocks until results are on host."""
@@ -140,6 +187,7 @@ class ShardedLexicalSession:
         vocab: int | None = None,
         use_kernel: bool | None = None,
         axis_names: tuple[str, ...] | None = None,
+        token_pack: str | None = None,
     ):
         self.scorer = get_scorer(scorer) if isinstance(scorer, str) else scorer
         if self.scorer.kind != "lexical":
@@ -163,8 +211,6 @@ class ShardedLexicalSession:
         )
         doc_sharding = NamedSharding(mesh, P(axis_names))
         repl = NamedSharding(mesh, P())
-        self._tokens = jax.device_put(jnp.asarray(tokens, jnp.int32), doc_sharding)
-        self._lengths = jax.device_put(jnp.asarray(lengths, jnp.int32), doc_sharding)
         if stats is None:
             if vocab is None:
                 raise ValueError("need stats or vocab to derive collection statistics")
@@ -173,11 +219,24 @@ class ShardedLexicalSession:
                 vocab=vocab, chunk_size=chunk_size,
             )
         self._stats = jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), repl), stats)
+        if vocab is None:
+            vocab = int(self._stats.cf.shape[0])
+        # both corpus leaves (packed or not) share the doc leading dim, so
+        # one PartitionSpec places either representation shard-resident
+        self._docs = jax.tree.map(
+            lambda x: jax.device_put(x, doc_sharding),
+            _pack_resident(tokens, lengths, vocab=vocab, mode=token_pack),
+        )
+        self._lengths = (
+            self._docs.lengths
+            if isinstance(self._docs, packing.PackedCorpus)
+            else self._docs[1]
+        )
 
         self._fn = cluster.search_mesh(
             mesh,
             jnp.zeros((1, 1), jnp.int32),  # query prototype: specs need structure only
-            (self._tokens, self._lengths),
+            self._docs,
             self.scorer,
             k=k,
             chunk_size=chunk_size,
@@ -188,13 +247,25 @@ class ShardedLexicalSession:
 
     @property
     def n_docs(self) -> int:
-        return int(self._tokens.shape[0])
+        return int(self._lengths.shape[0])
+
+    @property
+    def pack_mode(self) -> str:
+        """Resolved resident storage: ``none`` or the PackSpec mode."""
+        if isinstance(self._docs, packing.PackedCorpus):
+            return self._docs.spec.mode
+        return "none"
+
+    @property
+    def resident_corpus_bytes(self) -> int:
+        """Device bytes held by the resident corpus (tokens + lengths)."""
+        return packing.tree_nbytes(self._docs)
 
     def search(self, q_block: np.ndarray) -> topk.TopKState:
         """Scan one padded query block across all shards; blocks until the
         merged (replicated) top-k is on host."""
         state = self._fn(
-            jnp.asarray(q_block, jnp.int32), (self._tokens, self._lengths), self._stats
+            jnp.asarray(q_block, jnp.int32), self._docs, self._stats
         )
         # one scorer -> drop the grid axis: service rows are [n_q, k]
         return jax.block_until_ready(

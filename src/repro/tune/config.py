@@ -40,7 +40,11 @@ import contextlib
 
 # Bump when knobs are added/removed/re-meaning-ed: persisted winner-cache
 # entries recorded under another version are stale and fall back to defaults.
-SPACE_VERSION = 2  # v2: + serve_max_bucket (microbatch bucket-ladder cap)
+SPACE_VERSION = 3  # v3: + token_pack (packed corpus segments, core.packing)
+
+# legal token_pack values (mirrors packing.PACK_MODES; kept literal here so
+# config stays importable without jax)
+_TOKEN_PACK_MODES = ("none", "auto", "8", "16", "bitpack")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +91,16 @@ class TuningConfig:
     # the MXU/cache sweet spot per-query cost *rises*, so two sweet-spot
     # scans beat one giant one). None = uncapped (the pre-cap ladder).
     serve_max_bucket: int | None = 128
+    # -- packed corpus segments (core.packing) ------------------------------
+    # Token storage width for corpora the runner/serve layer prepares:
+    # "none" keeps int32 (the identity default), "auto" picks the narrowest
+    # width the vocab fits (u8/u16/bitpack), "8"/"16"/"bitpack" force one
+    # (degrading to auto's choice if the vocab doesn't fit — knobs degrade,
+    # never fail). Packed segments decode exactly on the consumer, so this
+    # knob changes bytes moved, never bytes written. Not part of fold_key:
+    # a packed corpus is a different pytree treedef, which jit and the
+    # mesh/fold caches already key on.
+    token_pack: str = "none"
 
     def __post_init__(self):
         for name in (
@@ -108,6 +122,11 @@ class TuningConfig:
             v = getattr(self, name)
             if not isinstance(v, (int, float)) or v < 0:
                 raise ValueError(f"{name} must be a non-negative number, got {v!r}")
+        if self.token_pack not in _TOKEN_PACK_MODES:
+            raise ValueError(
+                f"token_pack must be one of {_TOKEN_PACK_MODES}, "
+                f"got {self.token_pack!r}"
+            )
         if (
             self.serve_max_bucket is not None
             and self.serve_max_bucket < self.serve_min_bucket

@@ -1,0 +1,219 @@
+"""Packed corpus segments: exact round-trip + byte-identity to the unpacked
+oracle across shards × kernel × kill/resume (the pack contract: packing
+changes bytes moved, never bytes written)."""
+
+from __future__ import annotations
+
+import filecmp
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import tune
+from repro.core import anchors, packing, scan, scoring
+from repro.core.scoring import PAD_TOKEN
+from repro.experiments import grid as exp_grid
+from repro.experiments import runner
+
+from tests._hyp import given, settings, st
+
+
+def _corpus(rng, n, l, vocab, *, pad_heavy=False):
+    """PAD-padded token matrix + lengths, with optional PAD-heavy rows."""
+    toks = rng.integers(0, vocab, size=(n, l)).astype(np.int32)
+    hi = max(1, l // 4) if pad_heavy else l + 1
+    lens = rng.integers(0, hi, size=(n,)).astype(np.int32)
+    for i in range(n):
+        toks[i, lens[i]:] = PAD_TOKEN
+    return toks, lens
+
+
+# ---------------------------------------------------------------- round-trip
+
+
+@pytest.mark.parametrize("vocab", [1, 2, 255, 256, 4096, 65535, 65536, 2**20])
+@pytest.mark.parametrize("mode", ["auto", "8", "16", "bitpack"])
+def test_roundtrip_exact(vocab, mode):
+    rng = np.random.default_rng(vocab)
+    toks, lens = _corpus(rng, 16, 13, vocab, pad_heavy=True)
+    toks[0, :] = PAD_TOKEN  # zero-length doc
+    spec = packing.make_spec(vocab, 13, mode)
+    if spec is None:
+        pytest.skip(f"vocab {vocab} resolves to none under {mode}")
+    packed = packing.pack_tokens(toks, spec)
+    out = np.asarray(packing.unpack_tokens(packed, spec))
+    np.testing.assert_array_equal(out, toks)
+
+
+def test_roundtrip_pad_to_appends_pad_tokens():
+    spec = packing.make_spec(300, 10, "bitpack")
+    toks = np.arange(20, dtype=np.int32).reshape(2, 10) % 300
+    out = np.asarray(packing.unpack_tokens(packing.pack_tokens(toks, spec), spec, pad_to=16))
+    np.testing.assert_array_equal(out[:, :10], toks)
+    assert (out[:, 10:] == PAD_TOKEN).all()
+
+
+def test_width_selection():
+    # the ARCHITECTURE.md width table, as code
+    assert packing.resolve_mode(255, "auto") == "u8"
+    assert packing.resolve_mode(256, "auto") == "u16"
+    assert packing.resolve_mode(65535, "auto") == "u16"
+    assert packing.resolve_mode(65536, "auto") == "bitpack"
+    assert packing.resolve_mode(2**31 - 1, "auto") == "bitpack"
+    assert packing.resolve_mode(2**31, "auto") == "none"
+    # forced widths degrade (never fail) when the sentinel doesn't fit
+    assert packing.resolve_mode(4096, "8") == "u16"
+    assert packing.resolve_mode(2**20, "16") == "bitpack"
+    assert packing.resolve_mode(1, "bitpack") == "bitpack"
+    assert packing.resolve_mode(7, "none") == "none"
+    with pytest.raises(ValueError):
+        packing.resolve_mode(100, "u32")
+
+
+def test_pack_rejects_out_of_range_tokens():
+    spec = packing.make_spec(100, 4, "auto")
+    bad = np.array([[0, 1, 100, 2]], np.int32)  # 100 == sentinel value
+    with pytest.raises(ValueError):
+        packing.pack_tokens(bad, spec)
+    worse = np.array([[0, -5, 1, 2]], np.int32)
+    with pytest.raises(ValueError):
+        packing.pack_tokens(worse, spec)
+
+
+def test_packed_corpus_is_a_pytree():
+    rng = np.random.default_rng(0)
+    toks, lens = _corpus(rng, 8, 6, 300)
+    pc = packing.pack_corpus(toks, lens, vocab=300, mode="auto")
+    assert isinstance(pc, packing.PackedCorpus)
+    leaves, treedef = jax.tree_util.tree_flatten(pc)
+    assert len(leaves) == 2  # tokens, lengths — spec rides in the treedef
+    pc2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert pc2.spec == pc.spec
+    # leading-dim slicing through tree.map (the shard/segment plumbing)
+    half = jax.tree.map(lambda x: x[:4], pc)
+    assert half.n_docs == 4
+    out, out_lens = half.unpack()
+    np.testing.assert_array_equal(np.asarray(out), toks[:4])
+    # pack_corpus returns the plain tuple when the mode resolves to none
+    plain = packing.pack_corpus(toks, lens, vocab=300, mode="none")
+    assert isinstance(plain, tuple)
+
+
+@given(
+    vocab=st.integers(min_value=1, max_value=2**21),
+    n=st.integers(min_value=1, max_value=12),
+    l=st.integers(min_value=1, max_value=40),
+    mode=st.sampled_from(["auto", "8", "16", "bitpack"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=80, deadline=None)
+def test_roundtrip_property(vocab, n, l, mode, seed):
+    rng = np.random.default_rng(seed)
+    toks, lens = _corpus(rng, n, l, vocab, pad_heavy=bool(seed % 2))
+    spec = packing.make_spec(vocab, l, mode)
+    if spec is None:
+        return
+    out = np.asarray(packing.unpack_tokens(packing.pack_tokens(toks, spec), spec))
+    np.testing.assert_array_equal(out, toks)
+
+
+# ------------------------------------------------------------- scan parity
+
+
+@pytest.fixture(scope="module")
+def small_collection():
+    rng = np.random.default_rng(7)
+    vocab, n, l = 8192, 256, 24
+    toks, lens = _corpus(rng, n, l, vocab, pad_heavy=True)
+    q = rng.integers(0, vocab, size=(4, 6)).astype(np.int32)
+    stats = anchors.collection_stats(jnp.asarray(toks), jnp.asarray(lens), vocab)
+    return vocab, toks, lens, q, stats
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("mode", ["auto", "16", "bitpack"])
+def test_scan_parity_packed_vs_unpacked(small_collection, mode, use_kernel):
+    vocab, toks, lens, q, stats = small_collection
+    scorers = (scoring.get_scorer("bm25"), scoring.get_scorer("tfidf"))
+    ref = scan.search_local_multi(
+        jnp.asarray(q), (jnp.asarray(toks), jnp.asarray(lens)), scorers,
+        k=10, chunk_size=64, stats=stats, use_kernel=use_kernel,
+    )
+    pc = jax.tree.map(jnp.asarray, packing.pack_corpus(toks, lens, vocab=vocab, mode=mode))
+    got = scan.search_local_multi(
+        jnp.asarray(q), pc, scorers,
+        k=10, chunk_size=64, stats=stats, use_kernel=use_kernel,
+    )
+    assert np.asarray(got.scores).tobytes() == np.asarray(ref.scores).tobytes()
+    assert np.asarray(got.ids).tobytes() == np.asarray(ref.ids).tobytes()
+
+
+# ------------------------------------------- job-level byte-identity matrix
+
+
+def _run(spec, out, coll, tmp_path, **kw):
+    return runner.run_experiment(
+        spec, out_dir=str(tmp_path / out), collection=coll, trace_out=None, **kw
+    )
+
+
+def _assert_runs_identical(tmp_path, a, b):
+    runs = os.listdir(tmp_path / a / "runs")
+    assert runs
+    for f in runs:
+        assert filecmp.cmp(
+            str(tmp_path / a / "runs" / f), str(tmp_path / b / "runs" / f),
+            shallow=False,
+        ), f"{f} differs between {a} and {b}"
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_job_byte_identity_across_shards(tmp_path, n_shards, use_kernel):
+    spec = exp_grid.ExperimentSpec(
+        name="pk", grids=(exp_grid.parse_grid("bm25:k1=0.9|1.2"),),
+        n_docs=256, n_queries=8, chunk_size=32, segment_chunks=2,
+        n_shards=n_shards, use_kernel=use_kernel,
+    )
+    coll = runner.prepare_collection(spec, seed=0)
+    _run(spec, "oracle", coll, tmp_path)
+    _run(spec, "packed", coll, tmp_path, tuning=tune.TuningConfig(token_pack="auto"))
+    _assert_runs_identical(tmp_path, "oracle", "packed")
+
+
+def test_job_byte_identity_kill_resume(tmp_path):
+    from repro.cluster import build_schedule
+
+    spec = exp_grid.ExperimentSpec(
+        name="pkr", grids=(exp_grid.parse_grid("bm25:k1=0.9|1.2"),),
+        n_docs=256, n_queries=8, chunk_size=32, segment_chunks=1, n_shards=2,
+    )
+    coll = runner.prepare_collection(spec, seed=0)
+    _run(spec, "oracle", coll, tmp_path)
+    # packed run with an injected mid-job crash, resumed from checkpoints
+    faults = build_schedule(["crash:shard=1,segment=0,phase=pre_commit"])
+    rep = _run(
+        spec, "packed", coll, tmp_path,
+        tuning=tune.TuningConfig(token_pack="bitpack"),
+        faults=faults, max_retries=3,
+    )
+    assert rep["job"]["faults_fired"]
+    assert rep["job"]["tuning"]["pack_resolved"] == "bitpack"
+    _assert_runs_identical(tmp_path, "oracle", "packed")
+
+
+# --------------------------------------------------------------- tune knob
+
+
+def test_token_pack_knob_validation():
+    assert tune.TuningConfig().token_pack == "none"
+    assert tune.TuningConfig(token_pack="bitpack").token_pack == "bitpack"
+    with pytest.raises(ValueError):
+        tune.TuningConfig(token_pack="u64")
+    # knob space version bumped for the new knob (stale-cache guard)
+    from repro.tune.config import SPACE_VERSION
+
+    assert SPACE_VERSION >= 3
